@@ -1,0 +1,69 @@
+"""Layer-B mapping benchmark: flat (central-counter) vs hierarchical
+(tree) vs radix-factored gradient synchronization, measured as lowered
+collective wire bytes on an 8-device mesh (subprocess: jax locks the
+device count at first init)."""
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import collectives
+from repro.launch import hlo_analysis
+
+out = {}
+G = 1 << 20  # 1 Mi-element f32 gradient
+
+def wire(fn, mesh, in_spec, axis_names):
+    g = jax.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=in_spec,
+                      axis_names=axis_names, check_vma=False)
+    x = jnp.ones((G,), jnp.float32)
+    hlo = jax.jit(g).lower(x).compile().as_text()
+    return hlo_analysis.analyze(hlo).collective_bytes
+
+mesh2 = jax.make_mesh((2, 4), ("pod", "data"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+out["flat"] = wire(lambda x: collectives.psum_chain(x, ("data", "pod")),
+                   mesh2, P(), {"pod", "data"})
+out["hier"] = wire(
+    lambda x: collectives.gather_param(
+        jax.lax.psum(jax.lax.psum_scatter(x, "data", scatter_dimension=0,
+                                          tiled=True), "pod"),
+        ("data",), 0),
+    mesh2, P(), {"pod", "data"})
+meshr = collectives.make_factored_mesh(2, model=1, data=4, multi_pod=True)
+out["radix2"] = wire(
+    lambda x: collectives.tree_psum(x, ("pod", "data0", "data1")),
+    meshr, P(), {"pod", "data0", "data1"})
+print(json.dumps(out))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    env.pop("XLA_FLAGS", None)
+    t0 = time.perf_counter()
+    r = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                       capture_output=True, text=True, timeout=600)
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    if r.returncode == 0:
+        data = json.loads(r.stdout.strip().splitlines()[-1])
+        for k, v in data.items():
+            rows.append((f"collectives_sync_{k}_wireMiB", us,
+                         round(v / 2 ** 20, 2)))
+        if data.get("flat"):
+            rows.append(("collectives_hier_vs_flat_ratio", us,
+                         round(data["hier"] / data["flat"], 3)))
+    else:
+        rows.append(("collectives_bench_failed", us,
+                     r.stderr[-120:].replace(",", ";")))
+    return rows

@@ -1,0 +1,51 @@
+"""Fig. 4a/4b: barrier cycles vs radix vs arrival scatter, and the
+synchronization-free region needed for <10% overhead."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import barrier, barrier_sim
+
+KEY = jax.random.PRNGKey(0)
+DELAYS = [0.0, 128.0, 512.0, 2048.0]
+SFRS = [500, 1000, 2000, 5000, 10000, 20000]
+
+
+def fig4a():
+    rows = []
+    for radix in barrier.all_radices():
+        sched = barrier.kary_tree(radix)
+        for delay in DELAYS:
+            t0 = time.perf_counter()
+            span = float(barrier_sim.mean_span_cycles(KEY, sched, delay,
+                                                      n_trials=16))
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig4a_radix{radix}_delay{int(delay)}", us,
+                         round(span, 1)))
+    return rows
+
+
+def fig4b():
+    rows = []
+    for delay in DELAYS:
+        # best radix per scatter level
+        best = min(
+            ((float(barrier_sim.mean_span_cycles(KEY,
+                                                 barrier.kary_tree(r),
+                                                 delay, n_trials=8)), r)
+             for r in (2, 16, 32, 64, 256, 1024)))
+        radix = best[1]
+        sched = barrier.kary_tree(radix)
+        for sfr in SFRS:
+            t0 = time.perf_counter()
+            frac = float(barrier_sim.overhead_fraction(
+                KEY, sched, sfr, delay, n_trials=8))
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig4b_delay{int(delay)}_sfr{sfr}_radix{radix}",
+                         us, round(frac, 4)))
+    return rows
+
+
+def run():
+    return fig4a() + fig4b()

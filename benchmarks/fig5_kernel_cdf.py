@@ -1,0 +1,24 @@
+"""Fig. 5: CDF of fastest-vs-slowest PE runtime per kernel/input."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import workloads
+
+KEY = jax.random.PRNGKey(1)
+
+
+def run():
+    rows = []
+    suite = workloads.benchmark_suite()
+    for kernel, dims in suite.items():
+        for label, fn in dims.items():
+            t0 = time.perf_counter()
+            arr = fn(KEY)
+            gap = float(workloads.cdf_first_last_gap(arr))
+            p50 = float(jnp.percentile(arr - jnp.min(arr), 50))
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig5_{kernel}_{label}_gap", us, round(gap, 1)))
+            rows.append((f"fig5_{kernel}_{label}_p50", us, round(p50, 1)))
+    return rows

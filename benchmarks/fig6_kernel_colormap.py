@@ -1,0 +1,35 @@
+"""Fig. 6a/6b/6c: per (kernel x input x radix): barrier delay, barrier
+fraction of total runtime, and the fastest-vs-slowest-barrier speedup."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import barrier, barrier_sim, workloads
+
+KEY = jax.random.PRNGKey(2)
+RADICES = [2, 8, 16, 32, 64, 256, 1024]
+
+
+def run():
+    rows = []
+    suite = workloads.benchmark_suite()
+    for kernel, dims in suite.items():
+        for label, fn in dims.items():
+            arr = fn(KEY)
+            totals, fracs = {}, {}
+            for radix in RADICES:
+                sched = barrier.kary_tree(radix)
+                res = barrier_sim.simulate(arr, sched)
+                totals[radix] = float(res.exit_time)
+                fracs[radix] = float(res.mean_residency
+                                     / res.exit_time)
+            best = min(totals, key=totals.get)
+            worst = max(totals, key=totals.get)
+            speedup = totals[worst] / totals[best]
+            rows.append((f"fig6a_{kernel}_{label}_bestradix", 0.0, best))
+            rows.append((f"fig6b_{kernel}_{label}_frac", 0.0,
+                         round(fracs[best], 4)))
+            rows.append((f"fig6c_{kernel}_{label}_speedup", 0.0,
+                         round(speedup, 3)))
+    return rows

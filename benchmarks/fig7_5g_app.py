@@ -1,0 +1,33 @@
+"""Fig. 7: the 5G OFDM + beamforming application under central / tree /
+partial barriers (cycles, serial speedup, speedup over central)."""
+import time
+
+import jax
+
+from repro.core import fiveg
+
+KEY = jax.random.PRNGKey(3)
+
+
+def run():
+    rows = []
+    for n_rx in (16, 32, 64):
+        for fpr in (1, 4):
+            if (n_rx // 4) % fpr:
+                continue
+            app = fiveg.FiveGConfig(n_rx=n_rx, ffts_per_round=fpr)
+            t0 = time.perf_counter()
+            res = fiveg.compare_barriers(KEY, app, radix=32)
+            us = (time.perf_counter() - t0) * 1e6
+            tag = f"fig7_nrx{n_rx}_fpr{fpr}"
+            rows.append((f"{tag}_cycles_central", us,
+                         round(float(res["central"].total_cycles))))
+            rows.append((f"{tag}_cycles_partial32", us,
+                         round(float(res["partial"].total_cycles))))
+            rows.append((f"{tag}_speedup_partial", us,
+                         round(float(res["speedup_partial"]), 3)))
+            rows.append((f"{tag}_syncfrac_partial", us,
+                         round(float(res["partial"].sync_fraction), 4)))
+            rows.append((f"{tag}_speedup_serial", us,
+                         round(float(res["partial"].speedup_serial), 1)))
+    return rows

@@ -1,0 +1,36 @@
+"""Roofline table: reads the dry-run JSON records (runs/dryrun) and
+emits the per-cell terms (EXPERIMENTS.md §Roofline)."""
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "runs" / "dryrun"
+
+
+def load_records(mesh="single"):
+    recs = []
+    if not DRYRUN_DIR.exists():
+        return recs
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}_*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "ok":
+            recs.append(rec)
+    return recs
+
+
+def run():
+    rows = []
+    for rec in load_records():
+        r = rec["roofline"]
+        tag = f"roofline_{rec['arch']}_{rec['shape']}"
+        rows.append((f"{tag}_bottleneck", 0.0, r["bottleneck"]))
+        rows.append((f"{tag}_mfu", 0.0, round(r["mfu"], 4)))
+        rows.append((f"{tag}_compute_s", 0.0, round(r["compute_s"], 3)))
+        rows.append((f"{tag}_memory_s", 0.0, round(r["memory_s"], 3)))
+        rows.append((f"{tag}_collective_s", 0.0,
+                     round(r["collective_s"], 3)))
+        rows.append((f"{tag}_useful_ratio", 0.0,
+                     round(r["useful_ratio"], 3)))
+    if not rows:
+        rows.append(("roofline_no_dryrun_records", 0.0,
+                     "run python -m repro.launch.dryrun --all first"))
+    return rows

@@ -1,0 +1,25 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+"""
+import sys
+
+
+def main() -> None:
+    from . import (collectives_bench, fig4_random_delay, fig5_kernel_cdf,
+                   fig6_kernel_colormap, fig7_5g_app, roofline_table)
+    mods = [("fig4", fig4_random_delay), ("fig5", fig5_kernel_cdf),
+            ("fig6", fig6_kernel_colormap), ("fig7", fig7_5g_app),
+            ("collectives", collectives_bench),
+            ("roofline", roofline_table)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for tag, mod in mods:
+        if only and tag != only:
+            continue
+        for name, us, derived in mod.run():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

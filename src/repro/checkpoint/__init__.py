@@ -1,0 +1,4 @@
+"""Atomic sharded checkpointing."""
+from .ckpt import latest_step, prune, restore, save
+
+__all__ = ["latest_step", "prune", "restore", "save"]

@@ -1,0 +1,12 @@
+"""The paper's own machine configuration (Layer-A simulator defaults)
+plus the default SyncConfig mapping for Layer B."""
+from ..core.collectives import SyncConfig
+from ..core.topology import TeraPoolConfig
+
+MACHINE = TeraPoolConfig()
+
+# Default TPU-side synchronization config derived from the paper's best
+# result (radix-32 tree + partial sync): hierarchical schedules with
+# per-layer (overlappable) gradient sync.
+SYNC = SyncConfig(mode="hierarchical", fsdp=True, overlap=True)
+SYNC_BASELINE = SyncConfig(mode="flat", fsdp=False, overlap=False)

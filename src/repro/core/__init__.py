@@ -1,0 +1,31 @@
+"""The paper's primary contribution, in JAX.
+
+Two coupled layers (DESIGN.md §2):
+
+* **Faithful reproduction** — a cycle-level simulator of TeraPool barrier
+  synchronization (:mod:`topology`, :mod:`barrier`, :mod:`barrier_sim`),
+  the kernel arrival-time models (:mod:`workloads`) and the full 5G
+  OFDM + beamforming application (:mod:`fiveg`).
+* **TPU transplant** — radix-tunable hierarchical collective schedules
+  and partial synchronization for pod-scale training/serving
+  (:mod:`collectives`).
+"""
+from . import barrier, barrier_sim, collectives, fiveg, topology, workloads
+from .barrier import (BarrierSchedule, all_radices, central_counter,
+                      kary_tree, partial_barrier)
+from .barrier_sim import (BarrierResult, mean_span_cycles, overhead_fraction,
+                          simulate, simulate_batch, uniform_arrivals)
+from .collectives import (FLAT, HIERARCHICAL, SyncConfig, gather_param,
+                          make_factored_mesh, partial_psum, shard_slice,
+                          sync_gradient, tree_psum)
+from .topology import DEFAULT, TeraPoolConfig
+
+__all__ = [
+    "BarrierResult", "BarrierSchedule", "DEFAULT", "FLAT", "HIERARCHICAL",
+    "SyncConfig", "TeraPoolConfig", "all_radices", "barrier", "barrier_sim",
+    "central_counter", "collectives", "fiveg", "gather_param", "kary_tree",
+    "make_factored_mesh", "mean_span_cycles", "overhead_fraction",
+    "partial_barrier", "partial_psum", "shard_slice", "simulate",
+    "simulate_batch", "sync_gradient", "topology", "tree_psum",
+    "uniform_arrivals", "workloads",
+]

@@ -1,0 +1,106 @@
+"""Barrier schedules: central-counter, k-ary tree and partial barriers.
+
+A *schedule* is the static structure of the arrival tree (Sec. 3 of the
+paper): how many PEs synchronize per shared counter at every level, and
+the locality class (hence latency) of each level's counters.
+
+The radix ``k`` spans the whole design space:
+  * ``k == n_pes``  -> linear central-counter barrier (one level),
+  * ``k == 2``      -> radix-2 logarithmic tree (log2(N) levels),
+  * anything in between is a k-ary tree.  When ``log_k(N)`` is not an
+    integer the *first* level uses a smaller group (the paper adapts the
+    first step in the same way).
+
+Partial barriers synchronize a contiguous subset of the cluster (e.g. the
+256 PEs sharing one FFT) using the per-Group / per-Tile wakeup registers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+from .topology import DEFAULT, TeraPoolConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Level:
+    """One level of the arrival tree."""
+
+    group_size: int   # PEs (survivors) sharing one counter at this level
+    span: int         # contiguous original-PE span covered by one group
+    latency: int      # access latency to this level's counters (cycles)
+
+
+@dataclasses.dataclass(frozen=True)
+class BarrierSchedule:
+    """Static structure of one barrier instance."""
+
+    n_pes: int                 # PEs synchronized by this barrier
+    radix: int
+    levels: tuple              # tuple[Level, ...]
+    partial: bool = False      # True if a subset-of-cluster barrier
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+
+def _check_pow2(x: int, name: str) -> None:
+    if x < 2 or (x & (x - 1)) != 0:
+        raise ValueError(f"{name} must be a power of two >= 2, got {x}")
+
+
+def kary_tree(radix: int, n_pes: int | None = None,
+              cfg: TeraPoolConfig = DEFAULT, *,
+              partial: bool = False) -> BarrierSchedule:
+    """Build the k-ary arrival tree for ``n_pes`` cores.
+
+    ``n_levels = ceil(log_k N)``; the first level synchronizes
+    ``N / k**(n_levels-1)`` PEs so the remaining levels are exactly
+    radix-k (paper Sec. 3: "adapted ... by synchronizing a number of PEs
+    different from the radix of the tree in the first step").
+    """
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    k = int(radix)
+    _check_pow2(n, "n_pes")
+    _check_pow2(k, "radix")
+    if k > n:
+        raise ValueError(f"radix {k} exceeds n_pes {n}")
+
+    n_levels = math.ceil(math.log(n) / math.log(k))
+    first = n // (k ** (n_levels - 1))
+    sizes: List[int] = [first] + [k] * (n_levels - 1)
+    assert math.prod(sizes) == n
+
+    levels: List[Level] = []
+    span = 1
+    for g in sizes:
+        span *= g
+        levels.append(Level(group_size=g, span=span,
+                            latency=cfg.access_latency(span)))
+    return BarrierSchedule(n_pes=n, radix=k, levels=tuple(levels),
+                           partial=partial)
+
+
+def central_counter(n_pes: int | None = None,
+                    cfg: TeraPoolConfig = DEFAULT) -> BarrierSchedule:
+    """Linear central-counter barrier: every PE hits one shared counter."""
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    return kary_tree(n, n_pes=n, cfg=cfg)
+
+
+def partial_barrier(group_pes: int, radix: int,
+                    cfg: TeraPoolConfig = DEFAULT) -> BarrierSchedule:
+    """Barrier over a contiguous subset of ``group_pes`` cores (uses the
+    selective Group/Tile wakeup registers of Fig. 1b)."""
+    if group_pes > cfg.n_pes:
+        raise ValueError("partial barrier larger than the cluster")
+    return kary_tree(radix, n_pes=group_pes, cfg=cfg, partial=True)
+
+
+def all_radices(n_pes: int | None = None,
+                cfg: TeraPoolConfig = DEFAULT) -> Sequence[int]:
+    """All power-of-two radices 2..N (N == central counter)."""
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    return [1 << i for i in range(1, int(math.log2(n)) + 1)]

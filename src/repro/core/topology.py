@@ -1,0 +1,74 @@
+"""TeraPool machine model.
+
+The paper's cluster: 1024 Snitch RISC-V PEs tightly coupled to a 4 MiB
+multi-banked shared L1.  Hierarchy: 8 PEs / Tile, 16 Tiles / Group,
+8 Groups / cluster; banking factor 4 (4096 banks).  Access latency to any
+bank is bounded: 1 cycle within the Tile, <3 cycles within the Group,
+<5 cycles across Groups.  Banks are single-ported: concurrent atomics to
+the same bank serialize at 1 op/cycle.
+
+All timing constants live in :class:`TeraPoolConfig` so the simulator can
+be re-calibrated; the defaults reproduce the paper's headline numbers
+(see tests/test_barrier_sim.py and EXPERIMENTS.md §Repro).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TeraPoolConfig:
+    """Timing/topology model of the TeraPool cluster."""
+
+    n_pes: int = 1024
+    pes_per_tile: int = 8
+    tiles_per_group: int = 16
+    n_groups: int = 8
+    banking_factor: int = 4
+
+    # Memory access latency (cycles) by locality class.
+    lat_tile: int = 1     # PE -> bank in the same Tile
+    lat_group: int = 3    # PE -> bank in the same Group
+    lat_cluster: int = 5  # PE -> bank in another Group
+
+    # Single-ported banks: one atomic serviced per cycle.
+    bank_service_cycles: int = 1
+
+    # Software overhead of one barrier level: address computation, the
+    # amo.add issue slot, the compare/branch on the fetched value and the
+    # counter-reset store of the last arriver (re-initialization is folded
+    # into the arrival phase, Sec. 3).
+    instr_per_level: int = 20
+
+    # Notification phase: write to the memory-mapped wakeup register
+    # (AXI, cluster-level latency), wakeup-unit trigger fan-out, and the
+    # WFI resume cost of a sleeping Snitch core.
+    wakeup_write: int = 5
+    wakeup_trigger: int = 2
+    wfi_resume: int = 8
+
+    @property
+    def pes_per_group(self) -> int:
+        return self.pes_per_tile * self.tiles_per_group  # 128
+
+    @property
+    def n_banks(self) -> int:
+        return self.n_pes * self.banking_factor
+
+    @property
+    def wakeup_cycles(self) -> int:
+        """Full notification cost: register write -> trigger -> resume."""
+        return self.wakeup_write + self.wakeup_trigger + self.wfi_resume
+
+    def access_latency(self, span: int) -> int:
+        """Latency for a PE to reach a synchronization variable that is
+        placed local to a *contiguous* block of ``span`` PEs (the paper
+        places leaf counters on contiguous PE indices, Sec. 5)."""
+        if span <= self.pes_per_tile:
+            return self.lat_tile
+        if span <= self.pes_per_group:
+            return self.lat_group
+        return self.lat_cluster
+
+
+DEFAULT = TeraPoolConfig()

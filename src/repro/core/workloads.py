@@ -1,0 +1,172 @@
+"""Arrival-time models for the paper's benchmark kernels (Sec. 4.2).
+
+Each model produces per-PE *completion times* (cycles) for one parallel
+epoch of the kernel — the distribution whose CDF the paper plots in
+Fig. 5 and which drives the barrier-radix selection of Fig. 6.  The
+models encode the paper's qualitative structure:
+
+* AXPY / DOTP  — strictly local banks, uniform work -> steep CDF;
+  DOTP adds an atomic reduction onto ONE shared variable, whose
+  single-bank serialization scatters the arrivals by up to N_PE cycles.
+* DCT / MATMUL — remote accesses through the shared interconnect;
+  contention scatter grows with the input size.  The special layout
+  "2x4096" DCT maps every access to a local bank (banking factor 4,
+  sequential addresses) -> steepest CDF.
+* Conv2D       — locally-constrained accesses but *imbalanced* work:
+  PEs computing the zero-padded image border finish early -> bimodal
+  CDF with a wide first-to-last gap.
+
+Cycle constants are per-element software costs on a Snitch core
+(pseudo-dual-issue, 16/32-bit fixed point) and are deliberately exposed
+for calibration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .barrier_sim import _serialize_group
+from .topology import DEFAULT, TeraPoolConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCosts:
+    axpy_per_elem: float = 3.0     # 2 ld + fmadd + st, local banks
+    dotp_per_elem: float = 4.0     # 2 ld + fmadd (+ loop)
+    dct_per_elem: float = 14.0     # 8-pt DCT butterflies per sample
+    mac: float = 2.5               # MAC incl. avg. remote-load stall
+    conv_inner_px: float = 30.0    # 3x3 MACs + ld/st per inner pixel
+    conv_border_px: float = 9.0    # zero-skipped border pixel
+    startup_jitter: float = 4.0    # scheduling jitter at epoch start
+    contention_frac: float = 0.04  # scatter fraction for remote kernels
+    local_frac: float = 0.004      # scatter fraction for local kernels
+
+
+COSTS = KernelCosts()
+
+
+def _jitter(key: jax.Array, n: int, scale: float) -> jnp.ndarray:
+    """Non-negative contention jitter: half-normal + uniform tail."""
+    k1, k2 = jax.random.split(key)
+    hn = jnp.abs(jax.random.normal(k1, (n,))) * scale
+    un = jax.random.uniform(k2, (n,), minval=0.0, maxval=scale)
+    return hn + un
+
+
+def axpy_arrivals(key: jax.Array, n_elems: int,
+                  cfg: TeraPoolConfig = DEFAULT,
+                  costs: KernelCosts = COSTS) -> jnp.ndarray:
+    """y <- a*x + y, strictly tile-local banks."""
+    work = (n_elems / cfg.n_pes) * costs.axpy_per_elem
+    return work + _jitter(key, cfg.n_pes,
+                          costs.startup_jitter + costs.local_frac * work)
+
+
+def dotp_arrivals(key: jax.Array, n_elems: int,
+                  cfg: TeraPoolConfig = DEFAULT,
+                  costs: KernelCosts = COSTS) -> jnp.ndarray:
+    """Dot product: local MAC loop + atomic add of the partial sum to a
+    single shared variable (single-bank serialization -> wide scatter)."""
+    work = (n_elems / cfg.n_pes) * costs.dotp_per_elem
+    ready = work + _jitter(key, cfg.n_pes,
+                           costs.startup_jitter + costs.local_frac * work)
+    # All N_PE atomics target one bank; each PE proceeds when its own
+    # fetch&add completes.  Sorted completion times are the sorted ready
+    # times pushed through the max-plus queue; the arrival *distribution*
+    # (what the barrier sees) is exactly that set.
+    a = jnp.sort(ready)
+    j = jnp.arange(cfg.n_pes, dtype=a.dtype) * cfg.bank_service_cycles
+    start = jax.lax.cummax(a - j, axis=0) + j
+    return start + cfg.lat_cluster
+
+
+def dct_arrivals(key: jax.Array, n_elems: int, *, local_layout: bool = False,
+                 cfg: TeraPoolConfig = DEFAULT,
+                 costs: KernelCosts = COSTS) -> jnp.ndarray:
+    """Direct cosine transform; ``local_layout`` models the 2x4096 case
+    where sequential addressing makes every access bank-local."""
+    work = (n_elems / cfg.n_pes) * costs.dct_per_elem
+    if local_layout:
+        scale = costs.startup_jitter + costs.local_frac * work
+    else:  # contention scatter grows sublinearly (sqrt) with work
+        scale = costs.startup_jitter + costs.contention_frac * 25 * work ** 0.5
+    return work + _jitter(key, cfg.n_pes, scale)
+
+
+def matmul_arrivals(key: jax.Array, n: int, p: int, m: int,
+                    cfg: TeraPoolConfig = DEFAULT,
+                    costs: KernelCosts = COSTS) -> jnp.ndarray:
+    """(n x p) @ (p x m): outputs split across PEs, rows/columns fetched
+    through the shared interconnect; scatter grows with the input."""
+    outs_per_pe = (n * m) / cfg.n_pes
+    work = outs_per_pe * p * costs.mac
+    scale = costs.startup_jitter + costs.contention_frac * 25 * work ** 0.5
+    return work + _jitter(key, cfg.n_pes, scale)
+
+
+def conv2d_arrivals(key: jax.Array, h: int, w: int,
+                    cfg: TeraPoolConfig = DEFAULT,
+                    costs: KernelCosts = COSTS) -> jnp.ndarray:
+    """3x3 Conv2D: border-assigned PEs resolve zero pixels early."""
+    px_per_pe = (h * w) / cfg.n_pes
+    border_frac = (2 * h + 2 * w - 4) / (h * w)
+    n_border = jnp.maximum(1, jnp.round(border_frac * cfg.n_pes)).astype(int)
+    is_border = jnp.arange(cfg.n_pes) < n_border
+    work = jnp.where(is_border,
+                     px_per_pe * costs.conv_border_px,
+                     px_per_pe * costs.conv_inner_px)
+    inner_work = px_per_pe * costs.conv_inner_px
+    return work + _jitter(key, cfg.n_pes,
+                          costs.startup_jitter
+                          + costs.local_frac * inner_work)
+
+
+# ---------------------------------------------------------------------------
+# The benchmark suite of Fig. 5 / Fig. 6: kernel x input-dimension grid.
+# ---------------------------------------------------------------------------
+
+ArrivalFn = Callable[[jax.Array], jnp.ndarray]
+
+
+def benchmark_suite(cfg: TeraPoolConfig = DEFAULT,
+                    costs: KernelCosts = COSTS
+                    ) -> Dict[str, Dict[str, ArrivalFn]]:
+    """kernel -> {input-label -> arrival sampler}."""
+    def mk(fn, *args, **kw):
+        return lambda key: fn(key, *args, cfg=cfg, costs=costs, **kw)
+
+    return {
+        "axpy": {
+            "256Ki": mk(axpy_arrivals, 1 << 18),
+            "512Ki": mk(axpy_arrivals, 1 << 19),
+            "1Mi": mk(axpy_arrivals, 1 << 20),
+        },
+        "dotp": {
+            "256Ki": mk(dotp_arrivals, 1 << 18),
+            "512Ki": mk(dotp_arrivals, 1 << 19),
+            "1Mi": mk(dotp_arrivals, 1 << 20),
+        },
+        "dct": {
+            "2x4096": mk(dct_arrivals, 8192, local_layout=True),
+            "64x4096": mk(dct_arrivals, 1 << 18),
+            "256x4096": mk(dct_arrivals, 1 << 20),
+        },
+        "matmul": {
+            "128x32x128": mk(matmul_arrivals, 128, 32, 128),
+            "256x128x256": mk(matmul_arrivals, 256, 128, 256),
+            "512x128x512": mk(matmul_arrivals, 512, 128, 512),
+        },
+        "conv2d": {
+            "128x128": mk(conv2d_arrivals, 128, 128),
+            "256x256": mk(conv2d_arrivals, 256, 256),
+            "512x512": mk(conv2d_arrivals, 512, 512),
+        },
+    }
+
+
+def cdf_first_last_gap(arrivals: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 5 summary statistic: slowest-PE minus fastest-PE runtime."""
+    return jnp.max(arrivals, axis=-1) - jnp.min(arrivals, axis=-1)

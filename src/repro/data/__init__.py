@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline."""
+from .pipeline import DataConfig, SyntheticLM, batch_for_model
+
+__all__ = ["DataConfig", "SyntheticLM", "batch_for_model"]

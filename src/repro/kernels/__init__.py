@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec tiling;
+``ops.py`` the jit'd public wrappers; ``ref.py`` the pure-jnp oracles.
+Validated in interpret mode on CPU (tests/test_kernels.py), targeted
+at TPU (MXU-aligned tiles, VMEM scratch accumulation).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,38 @@
+"""AXPY kernel: y <- a*x + y.
+
+TeraPool adaptation: the paper's PE-local bank access pattern becomes
+VREG-resident elementwise math on (8,128)-aligned VMEM tiles; the
+"equal split across PEs" becomes the grid partition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 256      # (256, 128) f32 tile = 128 KiB VMEM per operand
+TILE_COLS = 128
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0, 0] * x_ref[...] + y_ref[...]
+
+
+def axpy(a: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """x, y: (R, C) 2-D views (ops.py reshapes 1-D inputs)."""
+    rows, cols = x.shape
+    br = min(TILE_ROWS, rows)
+    bc = min(TILE_COLS, cols)
+    grid = (pl.cdiv(rows, br), pl.cdiv(cols, bc))
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=jax.default_backend() != "tpu",
+    )(a.reshape(1, 1), x, y)

@@ -1,0 +1,42 @@
+"""3x3 same-conv kernel (the paper's Conv2D benchmark).
+
+TeraPool adaptation: the paper's border-vs-inner work imbalance
+disappears on TPU — the zero-padded halo is materialized by ops.py and
+every grid step does identical shift-and-MAC work on a full image tile
+(uniform arrival; the barrier-selection lesson moves to the collective
+layer instead).  One grid step per image; 9 static shifted slices keep
+everything in VREGs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(img_ref, k_ref, o_ref):
+    h, w = o_ref.shape[1], o_ref.shape[2]
+    acc = jnp.zeros((1, h, w), jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            acc += k_ref[di, dj] * img_ref[:, di:di + h, dj:dj + w
+                                           ].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+def conv2d(img_padded: jnp.ndarray, kernel: jnp.ndarray,
+           out_hw: tuple) -> jnp.ndarray:
+    """img_padded: (B, H+2, W+2) zero-padded; kernel: (3,3)."""
+    b = img_padded.shape[0]
+    h, w = out_hw
+    return pl.pallas_call(
+        _conv_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h + 2, w + 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((3, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w), jnp.float32),
+        interpret=jax.default_backend() != "tpu",
+    )(img_padded, kernel)

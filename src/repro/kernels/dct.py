@@ -1,0 +1,35 @@
+"""Row-wise DCT-II kernel (the paper's DCT benchmark).
+
+TeraPool adaptation: the paper's bank-local 2x2 DCT blocks become a
+(rows x n) @ (n x n) basis matmul on the MXU — tiles of rows stream
+through VMEM against a resident basis tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 256
+
+
+def _dct_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...].astype(jnp.float32), b_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def dct(x: jnp.ndarray, basis_t: jnp.ndarray) -> jnp.ndarray:
+    """x: (T, n); basis_t: (n, n) transposed DCT basis."""
+    t, n = x.shape
+    bt = min(ROW_TILE, t)
+    return pl.pallas_call(
+        _dct_kernel,
+        grid=(pl.cdiv(t, bt),),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=jax.default_backend() != "tpu",
+    )(x, basis_t)

@@ -1,0 +1,96 @@
+"""Dot-product with a k-ary reduction tree — the paper's DOTP kernel.
+
+TeraPool adaptation of the *barrier-coupled reduction*: the paper's
+PEs atomically add partial sums to ONE shared variable (serialized by
+the bank — the central-counter pattern).  On TPU the analogue of the
+shared variable is a revisited output block: every grid step
+accumulates its partial sum into the same (1,1) output tile (TPU grid
+steps execute sequentially per core, so the accumulation is exactly the
+serialized atomic).  The *k-ary tree* variant (ops.radix_dotp) splits
+the reduction into a partial-sums stage and a combine stage, one pallas
+call per tree level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 256
+TILE_COLS = 128
+
+
+def _dotp_kernel(x_ref, y_ref, o_ref):
+    part = jnp.sum(x_ref[...].astype(jnp.float32)
+                   * y_ref[...].astype(jnp.float32))
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[0, 0] = jnp.zeros((), jnp.float32)
+
+    o_ref[0, 0] += part
+
+
+def dotp_central(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Central-counter analogue: one revisited accumulator tile."""
+    rows, cols = x.shape
+    br, bc = min(TILE_ROWS, rows), min(TILE_COLS, cols)
+    grid = (pl.cdiv(rows, br) * pl.cdiv(cols, bc),)
+    nc = pl.cdiv(cols, bc)
+    return pl.pallas_call(
+        _dotp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda g: (g // nc, g % nc)),
+            pl.BlockSpec((br, bc), lambda g: (g // nc, g % nc)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=jax.default_backend() != "tpu",
+    )(x, y)[0, 0]
+
+
+def _partial_kernel(x_ref, y_ref, o_ref):
+    o_ref[0, 0] = jnp.sum(x_ref[...].astype(jnp.float32)
+                          * y_ref[...].astype(jnp.float32))
+
+
+def dotp_partials(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Leaf level of the tree: one independent partial sum per block
+    (no shared accumulator -> no serialization)."""
+    rows, cols = x.shape
+    br, bc = min(TILE_ROWS, rows), min(TILE_COLS, cols)
+    nr, nc = pl.cdiv(rows, br), pl.cdiv(cols, bc)
+    return pl.pallas_call(
+        _partial_kernel,
+        grid=(nr * nc,),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda g: (g // nc, g % nc)),
+            pl.BlockSpec((br, bc), lambda g: (g // nc, g % nc)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr * nc, 1), jnp.float32),
+        interpret=jax.default_backend() != "tpu",
+    )(x, y)
+
+
+def _combine_kernel(p_ref, o_ref):
+    o_ref[0, 0] = jnp.sum(p_ref[...])
+
+
+def combine_partials(parts: jnp.ndarray, radix: int) -> jnp.ndarray:
+    """One k-ary tree level: groups of ``radix`` partials -> 1."""
+    n = parts.shape[0]
+    pad = (-n) % radix
+    if pad:
+        parts = jnp.concatenate(
+            [parts, jnp.zeros((pad, 1), parts.dtype)], axis=0)
+    groups = parts.shape[0] // radix
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(groups,),
+        in_specs=[pl.BlockSpec((radix, 1), lambda g: (g, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((groups, 1), jnp.float32),
+        interpret=jax.default_backend() != "tpu",
+    )(parts)

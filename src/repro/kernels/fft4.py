@@ -1,0 +1,70 @@
+"""Radix-4 DIF FFT butterfly stage (the paper's 5G OFDM kernel).
+
+TeraPool adaptation of Fig. 3: the paper schedules each butterfly
+stage across 256 PEs and partially synchronizes between stages.  On
+TPU one *stage* is one pallas_call (grid = independent FFT rows — the
+"partial sync" boundary is the grid/pallas_call boundary, enforced by
+dataflow rather than a barrier); ops.fft4 chains the log4(N) stages.
+Complex math is carried as separate re/im planes (TPU has no complex
+VREGs); twiddles are precomputed per stage by ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+
+
+def _stage_kernel(re_ref, im_ref, wr_ref, wi_ref, or_ref, oi_ref):
+    rows, n = re_ref.shape
+    q = wr_ref.shape[1]               # quarter length of sub-transform
+    re = re_ref[...].reshape(rows, -1, 4, q)
+    im = im_ref[...].reshape(rows, -1, 4, q)
+    ar, ai = re[:, :, 0], im[:, :, 0]
+    br, bi = re[:, :, 1], im[:, :, 1]
+    cr, ci = re[:, :, 2], im[:, :, 2]
+    dr, di = re[:, :, 3], im[:, :, 3]
+    t0r, t0i = ar + cr, ai + ci
+    t1r, t1i = ar - cr, ai - ci
+    t2r, t2i = br + dr, bi + di
+    t3r, t3i = bi - di, -(br - dr)    # -j*(b-d)
+    w1r, w1i = wr_ref[0], wi_ref[0]
+    w2r, w2i = wr_ref[1], wi_ref[1]
+    w3r, w3i = wr_ref[2], wi_ref[2]
+
+    def cmul(xr, xi, yr, yi):
+        return xr * yr - xi * yi, xr * yi + xi * yr
+
+    y0r, y0i = t0r + t2r, t0i + t2i
+    y1r, y1i = cmul(t1r + t3r, t1i + t3i, w1r, w1i)
+    y2r, y2i = cmul(t0r - t2r, t0i - t2i, w2r, w2i)
+    y3r, y3i = cmul(t1r - t3r, t1i - t3i, w3r, w3i)
+    or_ref[...] = jnp.stack([y0r, y1r, y2r, y3r], axis=2
+                            ).reshape(rows, n)
+    oi_ref[...] = jnp.stack([y0i, y1i, y2i, y3i], axis=2
+                            ).reshape(rows, n)
+
+
+def fft4_stage(re: jnp.ndarray, im: jnp.ndarray, wr: jnp.ndarray,
+               wi: jnp.ndarray) -> tuple:
+    """One DIF stage.  re/im: (rows, n); wr/wi: (3, q) twiddles for
+    W^k, W^2k, W^3k with q = current sub-transform length / 4."""
+    rows, n = re.shape
+    bt = min(ROW_TILE, rows)
+    q = wr.shape[1]
+    out_shape = [jax.ShapeDtypeStruct((rows, n), jnp.float32)] * 2
+    return pl.pallas_call(
+        _stage_kernel,
+        grid=(pl.cdiv(rows, bt),),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((3, q), lambda i: (0, 0)),
+            pl.BlockSpec((3, q), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bt, n), lambda i: (i, 0))] * 2,
+        out_shape=out_shape,
+        interpret=jax.default_backend() != "tpu",
+    )(re, im, wr, wi)

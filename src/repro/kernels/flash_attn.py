@@ -1,0 +1,90 @@
+"""Flash attention forward kernel (the LM stack's compute hot-spot).
+
+Grid (B*H, n_q, n_kv); the kv axis is innermost so the running-softmax
+state lives in VMEM scratch across kv steps (TPU grid steps are
+sequential per core).  Causal masking from absolute block indices; the
+output block is written once on the last kv step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ, BK = 512, 512
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, n_kv: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _step():
+        q = q_ref[0]                               # (bq, d)
+        k = k_ref[0]                               # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            bq, bk = s.shape
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(jnp.isfinite(m_new)[:, None], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(jnp.isfinite(m_prev), alpha, 0.0)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    if causal:
+        pl.when(ki <= qi)(_step)   # skip fully-masked blocks
+    else:
+        _step()
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = BQ,
+                    bk: int = BK) -> jnp.ndarray:
+    """q,k,v: (BH, S, D) -> (BH, S, D)."""
+    bh, s, d = q.shape
+    bq, bk = min(bq, s), min(bk, s)
+    n_q, n_kv = pl.cdiv(s, bq), pl.cdiv(s, bk)
+    scale = d ** -0.5
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          n_kv=n_kv),
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=jax.default_backend() != "tpu",
+    )(q, k, v)

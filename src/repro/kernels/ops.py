@@ -1,0 +1,124 @@
+"""Jitted public wrappers for every Pallas kernel.
+
+Handles shape normalization (1-D -> TPU-aligned 2-D views, padding),
+stage chaining (FFT, k-ary dot-product reduction tree) and twiddle/
+basis precomputation.  Each wrapper's contract is its ref.py oracle.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import axpy as _axpy
+from . import conv2d as _conv2d
+from . import dct as _dct
+from . import dotp as _dotp
+from . import fft4 as _fft4
+from . import flash_attn as _fa
+from . import matmul as _mm
+from . import ref
+
+_LANES = 128
+
+
+def _as_2d(x: jnp.ndarray):
+    """Pad a 1-D array to a (rows, 128) TPU-aligned view."""
+    n = x.shape[0]
+    rows = -(-n // _LANES)
+    pad = rows * _LANES - n
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x.reshape(rows, _LANES), n
+
+
+@jax.jit
+def axpy(a: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    x2, n = _as_2d(x)
+    y2, _ = _as_2d(y)
+    out = _axpy.axpy(jnp.asarray(a, x.dtype), x2, y2)
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("radix",))
+def dotp(x: jnp.ndarray, y: jnp.ndarray, *, radix: int = 0) -> jnp.ndarray:
+    """radix=0 -> central accumulator; k>0 -> k-ary reduction tree
+    (one pallas stage per level), the paper's barrier-radix knob."""
+    x2, _ = _as_2d(x)
+    y2, _ = _as_2d(y)
+    if radix <= 1:
+        return _dotp.dotp_central(x2, y2)
+    parts = _dotp.dotp_partials(x2, y2)
+    while parts.shape[0] > 1:
+        parts = _dotp.combine_partials(parts, radix)
+    return parts[0, 0]
+
+
+@jax.jit
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return _mm_padded(x, w)
+
+
+def _mm_padded(x, w):
+    m, k = x.shape
+    _, n = w.shape
+
+    def up(v, b):
+        return -(-v // b) * b
+
+    mp, kp, np_ = up(m, 8), up(k, _LANES), up(n, _LANES)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    return _mm.matmul(xp, wp)[:m, :n]
+
+
+@jax.jit
+def conv2d(img: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    pad = jnp.pad(img, ((0, 0), (1, 1), (1, 1)))
+    return _conv2d.conv2d(pad, kernel.astype(jnp.float32),
+                          img.shape[1:])
+
+
+@jax.jit
+def dct(x: jnp.ndarray) -> jnp.ndarray:
+    basis_t = ref.dct_basis(x.shape[-1]).T
+    return _dct.dct(x, basis_t)
+
+
+def _stage_twiddles(n: int, stage: int):
+    m = n // (4 ** stage)
+    q = m // 4
+    k = jnp.arange(q, dtype=jnp.float32)
+    ang = -2.0 * jnp.pi * k / m
+    ws = [jnp.exp(1j * ang * j) for j in (1, 2, 3)]
+    wr = jnp.stack([jnp.real(w) for w in ws]).astype(jnp.float32)
+    wi = jnp.stack([jnp.imag(w) for w in ws]).astype(jnp.float32)
+    return wr, wi
+
+
+@jax.jit
+def fft4(re: jnp.ndarray, im: jnp.ndarray):
+    """Radix-4 DIF FFT over rows; returns digit-reversed spectrum
+    (re, im).  Stage-by-stage pallas calls mirror the paper's
+    partially-synchronized FFT schedule (Fig. 3)."""
+    n = re.shape[-1]
+    stages = int(round(math.log(n, 4)))
+    assert 4 ** stages == n, "fft4 needs power-of-4 length"
+    re = re.astype(jnp.float32)
+    im = im.astype(jnp.float32)
+    for s in range(stages):
+        wr, wi = _stage_twiddles(n, s)
+        re, im = _fft4.fft4_stage(re, im, wr, wi)
+    return re, im
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True) -> jnp.ndarray:
+    """q,k,v: (B,H,S,D)."""
+    b, h, s, d = q.shape
+    fold = lambda t: t.reshape(b * h, s, d)
+    out = _fa.flash_attention(fold(q), fold(k), fold(v), causal=causal)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These mirror the paper's benchmark kernels (Sec. 4.2) plus the LM
+stack's attention hot-spot.  Each oracle is the mathematical truth the
+tiled TPU kernels in this package are tested against (tests/
+test_kernels.py sweeps shapes and dtypes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def axpy(a: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return a * x + y
+
+
+def dotp(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def conv2d(img: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """3x3 'same' convolution with zero padding; img (B,H,W)."""
+    pad = jnp.pad(img, ((0, 0), (1, 1), (1, 1)))
+    H, W = img.shape[1:]
+    out = jnp.zeros_like(img, dtype=jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            out = out + kernel[di, dj] * pad[:, di:di + H, dj:dj + W
+                                             ].astype(jnp.float32)
+    return out
+
+
+def dct_basis(n: int) -> jnp.ndarray:
+    """Orthonormal DCT-II basis (n x n)."""
+    k = jnp.arange(n)[:, None].astype(jnp.float32)
+    i = jnp.arange(n)[None, :].astype(jnp.float32)
+    basis = jnp.cos(jnp.pi * (2 * i + 1) * k / (2 * n))
+    scale = jnp.where(k == 0, jnp.sqrt(1.0 / n), jnp.sqrt(2.0 / n))
+    return basis * scale
+
+
+def dct(x: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise DCT-II; x (T, n)."""
+    return x.astype(jnp.float32) @ dct_basis(x.shape[-1]).T
+
+
+def _fft4_stage(re, im, stage: int, n: int):
+    """One radix-4 DIF butterfly stage over rows of length n."""
+    q = n // (4 ** (stage + 1))
+    m = n // (4 ** stage)          # current sub-transform length
+    x = (re + 1j * im).reshape(re.shape[0], -1, 4, q)  # (rows, n/m, 4, q)
+    a, b, c, d = x[:, :, 0], x[:, :, 1], x[:, :, 2], x[:, :, 3]
+    t0, t1 = a + c, a - c
+    t2, t3 = b + d, -1j * (b - d)
+    k = jnp.arange(q, dtype=jnp.float32)
+    w1 = jnp.exp(-2j * jnp.pi * k / m)
+    y0 = t0 + t2
+    y1 = (t1 + t3) * w1
+    y2 = (t0 - t2) * w1 ** 2
+    y3 = (t1 - t3) * w1 ** 3
+    y = jnp.stack([y0, y1, y2, y3], axis=2).reshape(re.shape)
+    return jnp.real(y), jnp.imag(y)
+
+
+def fft4(re: jnp.ndarray, im: jnp.ndarray):
+    """Full radix-4 DIF FFT (digit-reversed output order);
+    re/im (rows, n) with n a power of 4."""
+    n = re.shape[-1]
+    stages = 0
+    m = n
+    while m > 1:
+        m //= 4
+        stages += 1
+    for s in range(stages):
+        re, im = _fft4_stage(re, im, s, n)
+    return re, im
+
+
+def digit_reverse_indices(n: int) -> jnp.ndarray:
+    """Base-4 digit reversal permutation for comparing fft4 against
+    jnp.fft.fft."""
+    import numpy as np
+    digits = 0
+    m = n
+    while m > 1:
+        m //= 4
+        digits += 1
+    idx = np.arange(n)
+    out = np.zeros(n, dtype=np.int64)
+    for _ in range(digits):
+        out = out * 4 + idx % 4
+        idx //= 4
+    return jnp.asarray(out)
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """O(S^2) reference attention; q,k,v (B,H,S,D)."""
+    S = q.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,6 @@
+"""Launcher: meshes, sharded step builders, dry-run and roofline."""
+from . import hlo_analysis, mesh, roofline, steps
+from .mesh import make_production_mesh, make_smoke_mesh
+
+__all__ = ["hlo_analysis", "make_production_mesh", "make_smoke_mesh",
+           "mesh", "roofline", "steps"]

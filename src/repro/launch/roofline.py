@@ -1,0 +1,97 @@
+"""Roofline terms for TPU v5e from the compiled dry-run artifact.
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = wire_bytes_per_device / ICI_bw
+
+plus MODEL_FLOPS = 6 * N_active * tokens (+ attention quadratic term)
+and the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..models.config import ModelConfig, ShapeCell
+
+# TPU v5e per-chip constants (assignment-specified).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_per_device: float
+    useful_ratio: float
+    bottleneck: str
+    step_s: float               # max of the three terms (overlap limit)
+    mfu: float                  # model_flops / (chips * peak * step_s)
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        return d
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeCell) -> float:
+    """Useful FLOPs per step.
+
+    train: 6 * N_active * tokens + 2x-fwd attention term
+    prefill: 2 * N_active * tokens + attention term
+    decode: 2 * N_active * batch (+ KV attention reads as FLOPs)
+    """
+    n = cfg.active_param_count()
+    s, b = shape.seq_len, shape.global_batch
+    if shape.kind == "train":
+        base = 6.0 * n * shape.tokens
+        mult = 3.0          # fwd + bwd(2x)
+        tokens = shape.tokens
+    elif shape.kind == "prefill":
+        base = 2.0 * n * shape.tokens
+        mult = 1.0
+        tokens = shape.tokens
+    else:
+        base = 2.0 * n * b  # one token per sequence
+        mult = 1.0
+        tokens = b
+
+    # Attention score/value FLOPs (quadratic or windowed/causal).
+    attn = 0.0
+    if cfg.has_attention:
+        h, d = cfg.n_heads, cfg.head_dim
+        if cfg.use_mla:
+            d = cfg.qk_nope_dim + cfg.qk_rope_dim
+        if shape.kind == "decode":
+            kv = min(s, cfg.attn_window) if cfg.attn_window else s
+            attn = 4.0 * b * h * d * kv * cfg.n_layers
+        else:
+            kv = min(s, cfg.attn_window) if cfg.attn_window else s
+            causal = 0.5 if cfg.causal and not cfg.attn_window else 1.0
+            attn = 4.0 * b * s * kv * h * d * causal * cfg.n_layers * mult
+    del tokens
+    return base + attn
+
+
+def compute_roofline(cfg: ModelConfig, shape: ShapeCell, *,
+                     n_chips: int, hlo_flops: float, hbm_bytes: float,
+                     wire_bytes: float) -> Roofline:
+    """All HLO inputs are per-device, trip-count-multiplied."""
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = wire_bytes / ICI_BW
+    mf = model_flops(cfg, shape)
+    ratio = mf / max(hlo_flops * n_chips, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    mfu = mf / max(n_chips * PEAK_FLOPS * step, 1e-30)
+    return Roofline(compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, model_flops=mf,
+                    hlo_flops_per_device=hlo_flops, useful_ratio=ratio,
+                    bottleneck=bottleneck, step_s=step, mfu=mfu)

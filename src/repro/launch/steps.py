@@ -1,0 +1,409 @@
+"""Sharded step builders: train_step / prefill_step / decode_step.
+
+Pure-GSPMD distribution (DESIGN.md §5): parameters carry
+(FSDP x TP) NamedShardings derived from the ParamDef registry; XLA's
+SPMD partitioner materializes the per-layer gathers inside the scanned
+stack and the reduce-scatters in the backward pass.  The paper's
+synchronization schedules map onto the sharding plan:
+
+* flat (central-counter): ``SyncConfig.fsdp=False`` — parameters
+  replicated over the data axes, gradients synchronized by ONE
+  full-size all-reduce spanning every chip;
+* hierarchical (k-ary tree): ``SyncConfig.fsdp=True`` — ZeRO-3 shards
+  over ``data``; backward reduce-scatters shard-sized partial sums
+  intra-pod and only shards cross the ``pod`` axis;
+* radix-k: factored data axes (core/collectives.make_factored_mesh)
+  stage the reduction per tree level.
+
+All step builders must be lowered/executed inside
+``with jax.set_mesh(mesh):`` so activation sharding constraints
+resolve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import collectives
+from ..core.collectives import SyncConfig
+from ..models import transformer
+from ..models.config import ModelConfig, ShapeCell
+from ..models.layers import ParamDef, constrain
+from .. import optim
+from . import mesh as mesh_mod
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+# ---------------------------------------------------------------------------
+# Sharding plan from ParamDef trees.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    full: Any       # pytree of PartitionSpec
+    scattered: Any  # pytree of bool: True if FSDP-sharded over data
+
+
+def _leaf_spec(d: ParamDef, data_ax, data_size: int, model_size: int,
+               fsdp_on: bool, tp_2d: bool = False):
+    # TP entries only where the dim divides the model axis (a 32001-row
+    # embedding or 504-class head stays TP-replicated).
+    ent = [a if (a is None or d.shape[i] % model_size == 0) else None
+           for i, a in enumerate(d.tp)]
+    if tp_2d:
+        # Serving 2D-TP: fold the data axes INTO the TP dim so weights
+        # shard over every chip with NO per-layer gathers (decode stays
+        # weight-streaming bound instead of interconnect bound).
+        for i, a in enumerate(ent):
+            if a == "model" and d.shape[i] % (model_size * data_size) == 0:
+                ent[i] = ("model",) + tuple(data_ax)
+        return P(*ent), False
+    sharded = (fsdp_on and data_ax and d.fsdp_dim is not None
+               and d.shape[d.fsdp_dim] % data_size == 0
+               and d.shape[d.fsdp_dim] >= data_size)
+    if sharded:
+        assert ent[d.fsdp_dim] is None, (d, "tp/fsdp dim collision")
+        ent[d.fsdp_dim] = data_ax if len(data_ax) > 1 else data_ax[0]
+    return P(*ent), bool(sharded)
+
+
+def make_plan(def_tree, mesh, fsdp_on: bool,
+              tp_2d: bool = False) -> ShardingPlan:
+    data_ax = mesh_mod.data_axes(mesh)
+    data_size = mesh_mod.axis_size(mesh, data_ax)
+    model_size = mesh.shape.get("model", 1)
+
+    def pick(i):
+        return jax.tree.map(
+            lambda d: _leaf_spec(d, data_ax, data_size, model_size,
+                                 fsdp_on, tp_2d)[i],
+            def_tree, is_leaf=_is_def)
+
+    return ShardingPlan(full=pick(0), scattered=pick(1))
+
+
+def tree_sds(def_tree, plan_full, mesh):
+    """ShapeDtypeStruct stand-ins with shardings (no allocation)."""
+    return jax.tree.map(
+        lambda d, s: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype),
+                                          sharding=NamedSharding(mesh, s)),
+        def_tree, plan_full, is_leaf=_is_def)
+
+
+def shardings_of(plan_full, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), plan_full)
+
+
+def _dp_axes(mesh) -> tuple:
+    return mesh_mod.manual_axes(mesh)   # ("pod","data"...) — batch axes
+
+
+def _dp_entry(mesh, shardable: bool = True):
+    dp = _dp_axes(mesh)
+    if not dp or not shardable:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+# ---------------------------------------------------------------------------
+# Train step.
+# ---------------------------------------------------------------------------
+
+METRIC_KEYS = ("loss", "ce", "aux", "mtp")
+
+
+def build_train_step(cfg: ModelConfig, mesh, *,
+                     sync: SyncConfig = collectives.HIERARCHICAL,
+                     opt_cfg: Optional[optim.OptConfig] = None):
+    """Returns (jitted_step, artifacts); step(params, opt_state, batch)
+    -> (params, opt_state, metrics).  Call within jax.set_mesh(mesh)."""
+    opt_cfg = opt_cfg or optim.OptConfig.from_model(cfg)
+    defs = transformer.param_defs(cfg)
+    sdefs = optim.state_defs(defs, opt_cfg)
+    plan = make_plan(defs, mesh, sync.fsdp)
+    splan = make_plan(sdefs, mesh, sync.fsdp)
+    dp = _dp_entry(mesh)
+    mkeys = METRIC_KEYS if cfg.use_mtp else METRIC_KEYS[:3]
+
+    def step(params, opt_state, batch):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        n_micro = min(cfg.micro_batches, gb)
+
+        def to_micro(x):
+            x = x.reshape((n_micro, gb // n_micro) + x.shape[1:])
+            return constrain(x, None, dp, *([None] * (x.ndim - 2)))
+
+        micro = jax.tree.map(to_micro, batch)
+
+        def local_loss(p, mb):
+            mb = jax.tree.map(
+                lambda x: constrain(x, dp, *([None] * (x.ndim - 1))), mb)
+            loss, metrics = transformer.loss_fn(p, cfg, mb)
+            return loss, tuple(metrics[k] for k in mkeys)
+
+        def micro_step(carry, mb):
+            g_acc, m_acc = carry
+            (_, metrics), grads = jax.value_and_grad(
+                local_loss, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                 g_acc, grads)
+            return (g_acc,
+                    tuple(a + m for a, m in zip(m_acc, metrics))), None
+
+        accum_dtype = jnp.dtype(cfg.grad_accum_dtype)
+        g0 = jax.tree.map(
+            lambda p, s: constrain(
+                jnp.zeros(p.shape, accum_dtype), *s),
+            params, plan.full)
+        m0 = tuple(jnp.zeros((), jnp.float32) for _ in mkeys)
+        (grads, msum), _ = jax.lax.scan(micro_step, (g0, m0), micro)
+
+        scale = 1.0 / n_micro
+        grads = jax.tree.map(
+            lambda g, s: constrain(g * jnp.asarray(scale, g.dtype), *s),
+            grads, plan.full)
+        nsq = optim.global_norm_sq(grads)
+        new_params, new_opt = optim.update(grads, opt_state, params,
+                                           opt_cfg, norm_sq=nsq)
+        mtree = {k: v / n_micro for k, v in zip(mkeys, msum)}
+        mtree["grad_norm"] = jnp.sqrt(nsq)
+        return new_params, new_opt, mtree
+
+    fn = jax.jit(
+        step,
+        in_shardings=(shardings_of(plan.full, mesh),
+                      shardings_of(splan.full, mesh),
+                      _batch_shardings(cfg, mesh, "train")),
+        out_shardings=(shardings_of(plan.full, mesh),
+                       shardings_of(splan.full, mesh), None),
+        donate_argnums=(0, 1))
+    art = {"defs": defs, "sdefs": sdefs, "plan": plan, "splan": splan,
+           "opt_cfg": opt_cfg}
+    return fn, art
+
+
+# ---------------------------------------------------------------------------
+# Batch shardings / cache specs.
+# ---------------------------------------------------------------------------
+
+def _batch_specs(cfg: ModelConfig, mesh, kind: str,
+                 shardable: bool = True) -> Dict[str, Any]:
+    dpe = _dp_entry(mesh, shardable)
+
+    def spec(nd):
+        return P(*([dpe] + [None] * (nd - 1)))
+
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        out["features"] = spec(3)
+    else:
+        out["tokens"] = spec(2)
+        if cfg.frontend == "vision" and kind != "decode":
+            out["img_embeds"] = spec(3)
+    if kind == "train":
+        out["targets"] = spec(2)
+    return out
+
+
+def _batch_shardings(cfg, mesh, kind, shardable: bool = True):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        _batch_specs(cfg, mesh, kind, shardable))
+
+
+_CACHE_MODEL_DIM = {  # leaf name -> dim carrying the "model" sharding
+    "k": 2, "v": 2, "positions": 2,   # (L, B, S, Hk, D) / (L, B, S)
+    "ckv": 2, "kpe": 2,               # (L, B, S, r)
+    "conv": 3,                        # (L, B, K-1, di)
+    "state": 2,                       # (L, B, di, n)
+}
+
+
+def _cache_leaf_spec(path, leaf, dp, model_size: int):
+    name = None
+    for entry in reversed(path):
+        n = getattr(entry, "name", None)
+        if n is None:
+            n = getattr(entry, "key", None)
+        if isinstance(n, str) and n in _CACHE_MODEL_DIM:
+            name = n
+            break
+    ent = [None] * leaf.ndim
+    if dp:
+        ent[1] = dp
+    if name is not None:
+        dim = _CACHE_MODEL_DIM[name]
+        if dim < leaf.ndim and leaf.shape[dim] % model_size == 0:
+            ent[dim] = "model"
+    return P(*ent)
+
+
+def cache_specs(caches_shape_tree, dp, model_size: int):
+    """Spec tree mirroring an init_caches result (stacked (L,B,...))."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(path, leaf, dp, model_size),
+        caches_shape_tree)
+
+
+def constrain_caches(caches, mesh):
+    """Model-axis constraints on freshly created caches."""
+    model_size = mesh.shape.get("model", 1)
+
+    def leaf(path, x):
+        spec = _cache_leaf_spec(path, x, None, model_size)
+        if all(s is None for s in spec):
+            return x
+        return constrain(x, *spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps.
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, mesh, *, batch: int,
+                       seq_len: int, fsdp: Optional[bool] = None):
+    """Prefill: encode ``seq_len`` tokens -> last logits (+ caches)."""
+    fsdp = cfg.fsdp_serve if fsdp is None else fsdp
+    defs = transformer.param_defs(cfg)
+    plan = make_plan(defs, mesh, fsdp and not cfg.serve_2d_tp,
+                     tp_2d=cfg.serve_2d_tp)
+    dp_axes = _dp_axes(mesh)
+    n_dp = mesh_mod.axis_size(mesh, dp_axes)
+    shardable = batch % max(n_dp, 1) == 0 and n_dp > 1
+    dpe = _dp_entry(mesh, shardable)
+    decoder = cfg.family != "encoder"
+
+    def fn(params, batch_in):
+        batch_in = jax.tree.map(
+            lambda x: constrain(x, dpe, *([None] * (x.ndim - 1))),
+            batch_in)
+        caches = None
+        if decoder:
+            caches = transformer.init_caches(cfg, batch, seq_len)
+            caches = jax.tree.map(
+                lambda x: constrain(x, None, dpe,
+                                    *([None] * (x.ndim - 2))), caches)
+            caches = constrain_caches(caches, mesh)
+        logits, new_caches, _, _ = transformer.forward(
+            params, cfg, batch_in, caches=caches, remat=False)
+        last = logits if cfg.family == "encoder" else logits[:, -1:]
+        return (last, new_caches) if decoder else last
+
+    fn_j = jax.jit(fn, in_shardings=(
+        shardings_of(plan.full, mesh),
+        _batch_shardings(cfg, mesh, "prefill", shardable)))
+    return fn_j, {"defs": defs, "plan": plan}
+
+
+def build_decode_step(cfg: ModelConfig, mesh, *, batch: int,
+                      max_len: int, fsdp: Optional[bool] = None):
+    """One decode step against pre-filled caches."""
+    fsdp = cfg.fsdp_serve if fsdp is None else fsdp
+    defs = transformer.param_defs(cfg)
+    plan = make_plan(defs, mesh, fsdp and not cfg.serve_2d_tp,
+                     tp_2d=cfg.serve_2d_tp)
+    dp_axes = _dp_axes(mesh)
+    n_dp = mesh_mod.axis_size(mesh, dp_axes)
+    model_size = mesh.shape.get("model", 1)
+    shardable = batch % max(n_dp, 1) == 0 and n_dp > 1
+    dpe = _dp_entry(mesh, shardable)
+    if cfg.serve_2d_tp:
+        # 2D-TP decode: weights shard over (model x data); ACTIVATIONS
+        # must therefore be batch-replicated (they are tiny at S=1) —
+        # only the KV cache keeps its batch sharding.
+        cfg = dataclasses.replace(cfg, batch_axes=(),
+                                  tp_axes=("model", "data"))
+
+    def fn(params, caches, tokens, pos):
+        logits, new_caches, _, _ = transformer.forward(
+            params, cfg, {"tokens": tokens}, caches=caches,
+            decode_pos=pos, remat=False)
+        return logits, new_caches
+
+    caches_shapes = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, batch, max_len))
+    cspecs = cache_specs(caches_shapes, dpe, model_size)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+    tok_dpe = None if cfg.serve_2d_tp else dpe
+    tok_sh = NamedSharding(mesh, P(tok_dpe, None))
+    pos_sh = NamedSharding(mesh, P(tok_dpe))
+    fn_j = jax.jit(fn,
+                   in_shardings=(shardings_of(plan.full, mesh), csh,
+                                 tok_sh, pos_sh),
+                   out_shardings=(None, csh),
+                   donate_argnums=(1,))
+    return fn_j, {"defs": defs, "plan": plan,
+                  "cache_shapes": caches_shapes, "cache_shardings": csh}
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins, no allocation).
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype),
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeCell, mesh, kind: str):
+    dp_axes = _dp_axes(mesh)
+    n_dp = mesh_mod.axis_size(mesh, dp_axes)
+    shardable = shape.global_batch % max(n_dp, 1) == 0 and n_dp > 1
+    specs = _batch_specs(cfg, mesh, kind, shardable)
+    gb = shape.global_batch
+    s = shape.seq_len if kind != "decode" else 1
+    out: Dict[str, Any] = {}
+    for k, spec in specs.items():
+        if k in ("tokens", "targets"):
+            out[k] = _sds((gb, s), "int32", mesh, spec)
+        elif k == "features":
+            out[k] = _sds((gb, s, cfg.d_model), "bfloat16", mesh, spec)
+        elif k == "img_embeds":
+            out[k] = _sds((gb, cfg.n_frontend_tokens, cfg.d_model),
+                          "bfloat16", mesh, spec)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell, mesh, *,
+                sync: SyncConfig = collectives.HIERARCHICAL,
+                opt_cfg: Optional[optim.OptConfig] = None):
+    """Full argument SDS tuple for the cell's step function."""
+    defs = transformer.param_defs(cfg)
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or optim.OptConfig.from_model(cfg)
+        plan = make_plan(defs, mesh, sync.fsdp)
+        sdefs = optim.state_defs(defs, opt_cfg)
+        splan = make_plan(sdefs, mesh, sync.fsdp)
+        return (tree_sds(defs, plan.full, mesh),
+                tree_sds(sdefs, splan.full, mesh),
+                batch_sds(cfg, shape, mesh, "train"))
+    plan = make_plan(defs, mesh, cfg.fsdp_serve and not cfg.serve_2d_tp,
+                     tp_2d=cfg.serve_2d_tp)
+    params = tree_sds(defs, plan.full, mesh)
+    if shape.kind == "prefill":
+        return (params, batch_sds(cfg, shape, mesh, "prefill"))
+    # decode
+    dp_axes = _dp_axes(mesh)
+    n_dp = mesh_mod.axis_size(mesh, dp_axes)
+    model_size = mesh.shape.get("model", 1)
+    shardable = shape.global_batch % max(n_dp, 1) == 0 and n_dp > 1
+    dpe = _dp_entry(mesh, shardable)
+    caches_shapes = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, shape.global_batch,
+                                        shape.seq_len))
+    cspecs = cache_specs(caches_shapes, dpe, model_size)
+    caches = jax.tree.map(
+        lambda sds, spec: _sds(sds.shape, sds.dtype, mesh, spec),
+        caches_shapes, cspecs)
+    tok_dpe = None if cfg.serve_2d_tp else dpe
+    toks = _sds((shape.global_batch, 1), "int32", mesh, P(tok_dpe, None))
+    pos = _sds((shape.global_batch,), "int32", mesh, P(tok_dpe))
+    return (params, caches, toks, pos)

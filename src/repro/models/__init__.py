@@ -1,0 +1,13 @@
+"""Model definitions: configs, layers and family stacks."""
+from . import attention, layers, mla, moe, ssm, transformer
+from .config import (SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeCell,
+                     applicable_shapes, skip_reason)
+from .transformer import (forward, init_caches, init_params, loss_fn,
+                          param_defs)
+
+__all__ = [
+    "SHAPES", "SHAPES_BY_NAME", "ModelConfig", "ShapeCell",
+    "applicable_shapes", "attention", "forward", "init_caches",
+    "init_params", "layers", "loss_fn", "mla", "moe", "param_defs",
+    "skip_reason", "ssm", "transformer",
+]

@@ -1,0 +1,290 @@
+"""Attention: GQA projections + flash-style chunked attention (train /
+prefill), sliding-window fast path, and single-token decode against a
+sequence-sharded KV cache.
+
+Memory discipline matters more than elegance here: every path bounds
+its live score block to ``(B, H, chunk, chunk)`` so 32k-token prefills
+and 340B-parameter configs lower within a 16 GiB HBM budget.  The
+decode cache is sharded over the ``model`` axis on the *sequence*
+dimension (flash-decode style): kv-head counts rarely divide the TP
+axis, sequence length always does.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import BATCH, ParamDef, apply_rope, constrain, rms_norm
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S_max, Hk, D)  [rolling buffer if window]
+    v: jnp.ndarray          # (B, S_max, Hk, D)
+    positions: jnp.ndarray  # (B, S_max) int32; -1 marks empty slots
+
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    h, hk, d, dm = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    defs = {
+        "wq": ParamDef((dm, h * d), (None, "model")),
+        "wk": ParamDef((dm, hk * d), (None, "model")),
+        "wv": ParamDef((dm, hk * d), (None, "model")),
+        "wo": ParamDef((h * d, dm), ("model", None), fsdp_dim=1),
+    }
+    if cfg.qkv_bias:
+        defs |= {
+            "bq": ParamDef((h * d,), ("model",), fsdp_dim=None, init="zeros"),
+            "bk": ParamDef((hk * d,), ("model",), fsdp_dim=None,
+                           init="zeros"),
+            "bv": ParamDef((hk * d,), ("model",), fsdp_dim=None,
+                           init="zeros"),
+        }
+    if cfg.qk_norm:
+        defs |= {
+            "q_norm": ParamDef((d,), (None,), fsdp_dim=None, init="ones"),
+            "k_norm": ParamDef((d,), (None,), fsdp_dim=None, init="ones"),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention.
+# ---------------------------------------------------------------------------
+
+def _block_attn(qc, kc, vc, mask, scale):
+    """One (q-block x kv-block) tile.  qc: (B,cq,Hk,g,D); kc/vc:
+    (B,ck,Hk,D|Dv); mask: (cq,ck) or None.  Returns unnormalized
+    (acc, m, l) contributions.  bf16 inputs with f32 accumulation
+    (MXU-native; avoids materializing f32 copies of q/k/v)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                   preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                  # (B,Hk,g,cq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(jnp.isfinite(m)[..., None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return acc, m, l
+
+
+def _combine(acc1, m1, l1, acc2, m2, l2):
+    m = jnp.maximum(m1, m2)
+    a1, a2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    a1 = jnp.where(jnp.isfinite(m1), a1, 0.0)
+    a2 = jnp.where(jnp.isfinite(m2), a2, 0.0)
+    return (acc1 * a1[..., None] + acc2 * a2[..., None],
+            m, l1 * a1 + l2 * a2)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    chunk: int = 1024,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """Chunked attention with running softmax.
+
+    q: (B,S,H,D); k,v: (B,T,Hk,D[v]).  Sliding-window with
+    ``window <= chunk`` touches only the diagonal and previous kv block
+    (O(S) work); otherwise all kv blocks are scanned.
+    """
+    B, S, H, D = q.shape
+    _, T, Hk, Dv = v.shape
+    g = H // Hk
+    scale = scale if scale is not None else D ** -0.5
+    cq = ck = min(chunk, S, T)
+    if S % cq or T % ck:  # small/odd shapes: single-block fallback
+        cq, ck = S, T
+    nq, nk = S // cq, T // ck
+    qb = q.reshape(B, nq, cq, Hk, g, D)
+    kb = k.reshape(B, nk, ck, Hk, D)
+    vb = v.reshape(B, nk, ck, Hk, Dv)
+    q_pos = jnp.arange(cq)
+    k_pos = jnp.arange(ck)
+
+    swa_fast = (window > 0 and window <= ck and nk == nq)
+
+    def mask_for(qi, ki):
+        qp = qi * cq + q_pos[:, None]
+        kp = ki * ck + k_pos[None, :]
+        m = jnp.ones((cq, ck), bool)
+        if causal:
+            m &= qp >= kp
+        if window > 0:
+            m &= (qp - kp) < window
+        return m
+
+    def q_block(qi):
+        qc = qb[:, qi]
+        if swa_fast:
+            # Diagonal + previous block only.
+            prev = jnp.maximum(qi - 1, 0)
+            acc, m, l = _block_attn(qc, kb[:, qi], vb[:, qi],
+                                    mask_for(qi, qi), scale)
+            pmask = mask_for(qi, prev) & (qi > 0)
+            a2, m2, l2 = _block_attn(qc, kb[:, prev], vb[:, prev],
+                                     pmask, scale)
+            acc, m, l = _combine(acc, m, l, a2, m2, l2)
+        else:
+            def kv_step(carry, ki):
+                acc, m, l = carry
+                a2, m2, l2 = _block_attn(qc, kb[:, ki], vb[:, ki],
+                                         mask_for(qi, ki), scale)
+                return _combine(acc, m, l, a2, m2, l2), None
+
+            init = (jnp.zeros((B, Hk, g, cq, Dv), jnp.float32),
+                    jnp.full((B, Hk, g, cq), NEG_INF, jnp.float32),
+                    jnp.zeros((B, Hk, g, cq), jnp.float32))
+            (acc, m, l), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, cq, H, Dv)
+
+    if nq == 1:
+        out = q_block(0)
+    else:
+        out = jax.lax.map(q_block, jnp.arange(nq))      # (nq,B,cq,H,Dv)
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a sequence-sharded cache).
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jnp.ndarray, cache: KVCache, pos: jnp.ndarray, *,
+                     window: int = 0,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B,1,H,D); cache.k/v: (B,Smax,Hk,D) with the S dim sharded over
+    the ``model`` axis.  Softmax over the sharded dim lowers to the
+    flash-decode psum pattern under GSPMD."""
+    B, _, H, D = q.shape
+    _, Smax, Hk, Dv = cache.v.shape
+    g = H // Hk
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hk, g, D)
+    # Same-dtype einsums here: an f32 preferred_element_type makes
+    # XLA-CPU materialize f32 CONVERTS of the cache operands, which the
+    # scheduler hoists into a full f32 copy of the multi-GiB carried
+    # cache.  Scores are softmaxed in f32 regardless.
+    s = jnp.einsum("bhgd,bshd->bhgs", qg,
+                   cache.k.astype(qg.dtype)) * scale
+    s = s.astype(jnp.float32)
+    valid = (cache.positions <= pos[:, None]) & (cache.positions >= 0)
+    if window > 0:
+        valid &= (pos[:, None] - cache.positions) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(cache.v.dtype), cache.v)
+    return out.reshape(B, 1, H * Dv).astype(q.dtype)
+
+
+def scatter_time(buf: jnp.ndarray, new: jnp.ndarray,
+                 slot: jnp.ndarray) -> jnp.ndarray:
+    """Write ``new`` (B,1,...) into time slot ``slot`` of ``buf``
+    (B,S,...) via a one-hot select.  Unlike a traced-index
+    dynamic-update-slice, this is ELEMENTWISE over the time dim, so a
+    sequence-sharded cache updates locally — no GSPMD gather/reshard of
+    the multi-GiB cache per layer."""
+    S = buf.shape[1]
+    hit = (jnp.arange(S) == slot).reshape((1, S) + (1,) * (buf.ndim - 2))
+    return jnp.where(hit, new.astype(buf.dtype), buf)
+
+
+def update_cache(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 pos: jnp.ndarray, *, window: int = 0) -> KVCache:
+    """Insert one token (B,1,Hk,D) at ``pos`` (rolling slot if SWA)."""
+    Smax = cache.k.shape[1]
+    slot = (pos[0] % Smax) if window > 0 else jnp.minimum(pos[0], Smax - 1)
+    k = scatter_time(cache.k, k_new, slot)
+    v = scatter_time(cache.v, v_new, slot)
+    positions = scatter_time(cache.positions[..., None],
+                             pos[:, None, None], slot)[..., 0]
+    return KVCache(k=k, v=v, positions=positions)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    s = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    hk, d = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, s, hk, d), dtype),
+        v=jnp.zeros((batch, s, hk, d), dtype),
+        positions=jnp.full((batch, s), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projections + rope + mixer).
+# ---------------------------------------------------------------------------
+
+def attention_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                    positions: jnp.ndarray,
+                    cache: Optional[KVCache] = None,
+                    decode_pos: Optional[jnp.ndarray] = None):
+    """Returns (out, new_cache).  ``cache`` set => write path; with
+    ``decode_pos`` also set => single-token decode."""
+    B, S, _ = x.shape
+    h, hk, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    # Constrain the FLAT projections (always divisible by the TP axis);
+    # forcing hk (often < TP size) onto the model axis triggers
+    # involuntary full rematerialization in the SPMD partitioner.
+    ba, ta = cfg.batch_axes, cfg.tp_axes
+    q = constrain(q, ba, None, ta).reshape(B, S, h, d)
+    k = constrain(k, ba, None, ta).reshape(B, S, hk, d)
+    v = constrain(v, ba, None, ta).reshape(B, S, hk, d)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and decode_pos is not None:
+        new_cache = update_cache(cache, k, v, decode_pos,
+                                 window=cfg.attn_window)
+        out = decode_attention(q, new_cache, decode_pos,
+                               window=cfg.attn_window)
+    else:
+        if cache is not None:  # prefill: persist k/v into the cache
+            Smax = cache.k.shape[1]
+            span = min(S, Smax)
+            # Rolling (windowed) caches address slot = position % Smax;
+            # align the fill so decode overwrites the OLDEST slot next.
+            first_pos = (S - span) % Smax if cfg.attn_window else 0
+
+            def fill(buf, val):  # static-shape write (no traced DUS)
+                val = val[:, -span:].astype(buf.dtype)
+                if span < Smax:
+                    pad = [(0, 0), (0, Smax - span)] \
+                        + [(0, 0)] * (val.ndim - 2)
+                    val = jnp.pad(val, pad)
+                return jnp.roll(val, first_pos, axis=1) if first_pos \
+                    else val
+
+            pos_grid = jnp.broadcast_to(positions[..., -span:], (B, span)
+                                        ).astype(jnp.int32)
+            if span < Smax:
+                pos_grid = jnp.pad(pos_grid, [(0, 0), (0, Smax - span)],
+                                   constant_values=-1)
+            if first_pos:
+                pos_grid = jnp.roll(pos_grid, first_pos, axis=1)
+            new_cache = KVCache(k=fill(cache.k, k), v=fill(cache.v, v),
+                                positions=pos_grid)
+        out = flash_attention(q, k, v, causal=cfg.causal,
+                              window=cfg.attn_window, chunk=cfg.attn_chunk)
+        out = out.reshape(B, S, h * d)
+    out = constrain(out, ba, None, ta)
+    return out @ p["wo"].astype(dt), new_cache

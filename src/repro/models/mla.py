@@ -1,0 +1,162 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Train/prefill use the expanded path through :func:`flash_attention`
+(qk dim = nope+rope, v dim = v_head_dim).  Decode uses the *absorbed*
+path: queries are folded through the k up-projection so attention runs
+directly against the (B, S, kv_lora) latent cache — the cache is ~9x
+smaller than GQA's and is sequence-sharded over the ``model`` axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import BATCH, ParamDef, apply_rope, constrain, rms_norm
+from .attention import NEG_INF, flash_attention
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray        # (B, S_max, kv_lora) normalized latents
+    kpe: jnp.ndarray        # (B, S_max, qk_rope_dim) roped shared key
+    positions: jnp.ndarray  # (B, S_max) int32; -1 == empty
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "q_a": ParamDef((cfg.d_model, cfg.q_lora_rank), (None, None)),
+        "q_a_norm": ParamDef((cfg.q_lora_rank,), (None,), fsdp_dim=None,
+                             init="ones"),
+        "q_b": ParamDef((cfg.q_lora_rank, h * qk), (None, "model")),
+        "kv_a": ParamDef((cfg.d_model,
+                          cfg.kv_lora_rank + cfg.qk_rope_dim),
+                         (None, None)),
+        "kv_a_norm": ParamDef((cfg.kv_lora_rank,), (None,), fsdp_dim=None,
+                              init="ones"),
+        "k_b": ParamDef((cfg.kv_lora_rank, h * cfg.qk_nope_dim),
+                        (None, "model")),
+        "v_b": ParamDef((cfg.kv_lora_rank, h * cfg.v_head_dim),
+                        (None, "model")),
+        "wo": ParamDef((h * cfg.v_head_dim, cfg.d_model),
+                       ("model", None), fsdp_dim=1),
+    }
+
+
+def _latents(p, x, cfg, positions):
+    """Shared (normalized latent, roped positional key) for the cache."""
+    ckv_full = x @ p["kv_a"].astype(x.dtype)
+    ckv, kpe = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_a_norm"])
+    kpe = apply_rope(kpe[:, :, None, :], positions,
+                     cfg.rope_theta)[:, :, 0]
+    return ckv, kpe
+
+
+def _queries(p, x, cfg, positions):
+    B, S, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(x @ p["q_a"].astype(x.dtype), p["q_a_norm"])
+    q = (cq @ p["q_b"].astype(x.dtype)).reshape(B, S, h, dn + dr)
+    q = constrain(q, cfg.batch_axes, None, cfg.tp_axes, None)
+    q_nope, q_pe = jnp.split(q, [dn], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+              positions: jnp.ndarray,
+              cache: Optional[MLACache] = None,
+              decode_pos: Optional[jnp.ndarray] = None):
+    """Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    scale = (dn + dr) ** -0.5
+    dt = x.dtype
+
+    if cache is not None and decode_pos is not None:
+        # ---- absorbed decode ----
+        from .attention import scatter_time
+        ckv_new, kpe_new = _latents(p, x, cfg, positions)     # (B,1,..)
+        Smax = cache.ckv.shape[1]
+        slot = jnp.minimum(decode_pos[0], Smax - 1)
+        new_cache = MLACache(
+            ckv=scatter_time(cache.ckv, ckv_new, slot),
+            kpe=scatter_time(cache.kpe, kpe_new, slot),
+            positions=scatter_time(cache.positions[..., None],
+                                   decode_pos[:, None, None],
+                                   slot)[..., 0],
+        )
+        q_nope, q_pe = _queries(p, x, cfg, positions)
+        k_b = p["k_b"].reshape(cfg.kv_lora_rank, h, dn)
+        v_b = p["v_b"].reshape(cfg.kv_lora_rank, h, dv)
+        # Absorb the k up-projection into the query.
+        # bf16 einsums against the carried cache (f32 converts of the
+        # cache get hoisted to a full f32 cache copy on XLA-CPU);
+        # softmax runs in f32.
+        q_lat = jnp.einsum("bhd,chd->bhc", q_nope[:, 0], k_b)  # (B,h,c)
+        s = (jnp.einsum("bhc,bsc->bhs", q_lat.astype(new_cache.ckv.dtype),
+                        new_cache.ckv)
+             + jnp.einsum("bhr,bsr->bhs",
+                          q_pe[:, 0].astype(new_cache.kpe.dtype),
+                          new_cache.kpe)).astype(jnp.float32) * scale
+        valid = ((new_cache.positions <= decode_pos[:, None])
+                 & (new_cache.positions >= 0))
+        s = jnp.where(valid[:, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhs,bsc->bhc", pr.astype(new_cache.ckv.dtype),
+                         new_cache.ckv)
+        out = jnp.einsum("bhc,chd->bhd", ctx.astype(dt), v_b.astype(dt))
+        out = out.reshape(B, 1, h * dv).astype(dt)
+    else:
+        # ---- expanded train/prefill ----
+        ckv, kpe = _latents(p, x, cfg, positions)
+        new_cache = cache
+        if cache is not None:
+            Smax = cache.ckv.shape[1]
+            span = min(S, Smax)
+
+            def fill(buf, val):
+                val = val[:, -span:].astype(buf.dtype)
+                if span == Smax:
+                    return val
+                pad = [(0, 0), (0, Smax - span)] + [(0, 0)] * (val.ndim - 2)
+                return jnp.pad(val, pad)
+
+            pos_grid = jnp.broadcast_to(positions[..., -span:],
+                                        (B, span)).astype(jnp.int32)
+            if span < Smax:
+                pos_grid = jnp.pad(pos_grid, [(0, 0), (0, Smax - span)],
+                                   constant_values=-1)
+            new_cache = MLACache(ckv=fill(cache.ckv, ckv),
+                                 kpe=fill(cache.kpe, kpe),
+                                 positions=pos_grid)
+        q_nope, q_pe = _queries(p, x, cfg, positions)
+        k_nope = (ckv @ p["k_b"].astype(dt)).reshape(B, S, h, dn)
+        v = (ckv @ p["v_b"].astype(dt)).reshape(B, S, h, dv)
+        k_nope = constrain(k_nope, cfg.batch_axes, None, cfg.tp_axes,
+                           None)
+        v = constrain(v, cfg.batch_axes, None, cfg.tp_axes, None)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe[:, :, None, :],
+                                      (B, S, h, dr)).astype(dt)], axis=-1)
+        out = flash_attention(q, k, v, causal=cfg.causal,
+                              chunk=cfg.attn_chunk, scale=scale)
+        out = out.reshape(B, S, h * dv)
+
+    out = constrain(out, cfg.batch_axes, None, cfg.tp_axes)
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        ckv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        kpe=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        positions=jnp.full((batch, max_len), -1, jnp.int32),
+    )

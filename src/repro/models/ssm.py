@@ -1,0 +1,157 @@
+"""Mamba-1 selective state-space block (Falcon-Mamba / Hymba SSM path).
+
+The sequence recurrence runs as a chunked ``lax.scan``: the carry is the
+(B, d_inner, n) SSM state, channels TP-sharded over ``model``.  Decode
+keeps (conv_state, ssm_state) — O(1) in sequence length, which is what
+makes the ``long_500k`` cell tractable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import BATCH, ParamDef, constrain
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # (B, d_conv-1, d_inner) last inputs
+    state: jnp.ndarray   # (B, d_inner, n) SSM state
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    dm, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    return {
+        "in_proj": ParamDef((dm, 2 * di), (None, "model")),
+        "conv_w": ParamDef((cfg.d_conv, di), (None, "model"),
+                           fsdp_dim=None, scale=1.0),
+        "conv_b": ParamDef((di,), ("model",), fsdp_dim=None, init="zeros"),
+        "x_proj": ParamDef((di, r + 2 * n), ("model", None), fsdp_dim=None),
+        "dt_proj": ParamDef((r, di), (None, "model"), fsdp_dim=None),
+        "dt_bias": ParamDef((di,), ("model",), fsdp_dim=None, init="ssm_dt"),
+        "a_log": ParamDef((di, n), ("model", None), fsdp_dim=None,
+                          init="ssm_a"),
+        "d_skip": ParamDef((di,), ("model",), fsdp_dim=None, init="ones"),
+        "out_proj": ParamDef((di, dm), ("model", None), fsdp_dim=1),
+    }
+
+
+def _ssm_params(p, x):
+    """Input-dependent (dt, B, C) for x: (..., di)."""
+    f32 = jnp.float32
+    dbc = x @ p["x_proj"].astype(x.dtype)
+    r = p["dt_proj"].shape[0]
+    n = p["a_log"].shape[1]
+    dt, b, c = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(f32) @ p["dt_proj"].astype(f32)
+                         + p["dt_bias"].astype(f32))         # (..., di)
+    return dt, b.astype(f32), c.astype(f32)
+
+
+def _causal_conv(p, x, conv_state=None):
+    """Depthwise causal conv over S.  x: (B,S,di)."""
+    dw = p["conv_w"].astype(jnp.float32)                      # (K, di)
+    K = dw.shape[0]
+    xf = x.astype(jnp.float32)
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), jnp.float32)
+    else:
+        pad = conv_state.astype(jnp.float32)
+    xp = jnp.concatenate([pad, xf], axis=1)                   # (B,S+K-1,di)
+    out = sum(xp[:, i:i + x.shape[1]] * dw[i] for i in range(K))
+    out = out + p["conv_b"].astype(jnp.float32)
+    new_state = xp[:, -(K - 1):]
+    return out.astype(x.dtype), new_state.astype(x.dtype)
+
+
+def ssm_scan(p: dict, xc: jnp.ndarray, state: jnp.ndarray,
+             chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the selective-scan recurrence over S.
+
+    xc: (B,S,di) post-conv activations; state: (B,di,n).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;  y_t = C_t . h_t + D x_t.
+    Scanned chunk-by-chunk (sequential outer scan, dense inner compute)
+    to keep the HLO small for 4k-32k sequences.
+    """
+    B, S, di = xc.shape
+    n = state.shape[-1]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))              # (di, n)
+    dt, bmat, cmat = _ssm_params(p, xc)                       # (B,S,..)
+    x_f = xc.astype(jnp.float32)
+
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    nchunks = S // c
+
+    def chunk_step(h, idx):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * c, c, 1)
+        dt_c, b_c, c_c, x_c = sl(dt), sl(bmat), sl(cmat), sl(x_f)
+        # Per-step decay/input within the chunk, then a first-order
+        # associative scan over time.
+        decay = jnp.exp(dt_c[..., None] * A)                  # (B,c,di,n)
+        inp = (dt_c * x_c)[..., None] * b_c[:, :, None, :]    # (B,c,di,n)
+
+        def comb(a, b):
+            (d1, u1), (d2, u2) = a, b
+            return d1 * d2, u1 * d2 + u2
+
+        dacc, uacc = jax.lax.associative_scan(comb, (decay, inp), axis=1)
+        h_seq = dacc * h[:, None] + uacc                      # (B,c,di,n)
+        y = jnp.einsum("bcdn,bcn->bcd", h_seq, c_c)
+        return h_seq[:, -1], y
+
+    if nchunks == 1:
+        state, y = chunk_step(state, 0)
+    else:
+        state, ys = jax.lax.scan(chunk_step, state, jnp.arange(nchunks))
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y + x_f * p["d_skip"].astype(jnp.float32)
+    return y.astype(xc.dtype), state
+
+
+def ssm_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+              cache: Optional[SSMCache] = None,
+              decode: bool = False):
+    """Full Mamba block.  Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)
+    xz = constrain(xz, cfg.batch_axes, None, cfg.tp_axes)
+    xin, z = jnp.split(xz, 2, axis=-1)                        # (B,S,di)
+
+    conv_state = cache.conv if cache is not None else None
+    xc, new_conv = _causal_conv(p, xin, conv_state)
+    xc = jax.nn.silu(xc)
+
+    state = (cache.state if cache is not None else
+             jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32))
+    state = constrain(state, cfg.batch_axes, cfg.tp_axes, None)
+    if decode:
+        # Single-step recurrence (S == 1).
+        A = -jnp.exp(p["a_log"].astype(jnp.float32))
+        dtv, bv, cv = _ssm_params(p, xc[:, 0])                # (B, di/..)
+        decay = jnp.exp(dtv[..., None] * A)
+        state = decay * state + (dtv * xc[:, 0].astype(jnp.float32)
+                                 )[..., None] * bv[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", state, cv)
+        y = y + xc[:, 0].astype(jnp.float32) * p["d_skip"].astype(
+            jnp.float32)
+        y = y[:, None].astype(dt)
+    else:
+        y, state = ssm_scan(p, xc, state)
+
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    new_cache = SSMCache(conv=new_conv, state=state)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int,
+                   dtype=jnp.bfloat16) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        state=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )

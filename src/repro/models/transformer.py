@@ -1,0 +1,358 @@
+"""Composable model stacks for every assigned architecture family.
+
+One generic pre-norm residual block parameterized by the family:
+  * dense:   x += attn(n1(x));  x += mlp(n2(x))
+  * moe:     x += attn(n1(x));  x += moe(n2(x))      (+ leading dense)
+  * ssm:     x += mamba(n1(x))
+  * hybrid:  h = n1(x); x += g_a*attn(h) + g_s*mamba(h);  x += mlp(n2(x))
+  * encoder: dense block, bidirectional attention
+
+Layers are scanned (stacked parameters) with full rematerialization in
+training, so the HLO stays one-layer-sized and activation memory is
+bounded by the scan carries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (BATCH, ParamDef, constrain, init_tree, mlp_apply,
+                     mlp_defs, rms_norm, stacked)
+
+
+# ---------------------------------------------------------------------------
+# Parameter registry.
+# ---------------------------------------------------------------------------
+
+def _norm_def(d: int) -> ParamDef:
+    return ParamDef((d,), (None,), fsdp_dim=None, init="ones")
+
+
+def block_defs(cfg: ModelConfig, *, moe_layer: bool = False) -> dict:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"norm1": _norm_def(d)}
+    if cfg.family == "ssm":
+        defs["ssm"] = ssm_mod.ssm_defs(cfg)
+        return defs
+    if cfg.use_mla:
+        defs["attn"] = mla_mod.mla_defs(cfg)
+    else:
+        defs["attn"] = attn_mod.attn_defs(cfg)
+    if cfg.family == "hybrid":
+        defs["ssm"] = ssm_mod.ssm_defs(cfg)
+        defs["gate_attn"] = ParamDef((1,), (None,), fsdp_dim=None,
+                                     init="ones")
+        defs["gate_ssm"] = ParamDef((1,), (None,), fsdp_dim=None,
+                                    init="ones")
+    defs["norm2"] = _norm_def(d)
+    if moe_layer:
+        defs["moe"] = moe_mod.moe_defs(cfg)
+    else:
+        defs["mlp"] = mlp_defs(d, cfg.d_ff, cfg.act)
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    defs: Dict[str, Any] = {"final_norm": _norm_def(d)}
+    if cfg.frontend != "audio":
+        defs["embed"] = ParamDef((v, d), ("model", None), fsdp_dim=1,
+                                 scale=d ** 0.5)  # ~N(0, 1/sqrt(d))
+    defs["head"] = ParamDef((d, v), (None, "model"), fsdp_dim=0)
+
+    def stack_tree(tree, n):
+        return jax.tree.map(lambda pd: stacked(pd, n), tree,
+                            is_leaf=lambda x: isinstance(x, ParamDef))
+
+    if cfg.is_moe:
+        if cfg.n_dense_layers:
+            defs["dense_layers"] = stack_tree(
+                block_defs(cfg, moe_layer=False), cfg.n_dense_layers)
+        defs["layers"] = stack_tree(block_defs(cfg, moe_layer=True),
+                                    cfg.n_moe_layers)
+    else:
+        defs["layers"] = stack_tree(block_defs(cfg), cfg.n_layers)
+
+    if cfg.use_mtp:
+        defs["mtp"] = {
+            "proj": ParamDef((2 * d, d), (None, None)),
+            "norm_h": _norm_def(d),
+            "norm_e": _norm_def(d),
+            "block": block_defs(cfg, moe_layer=False),
+            "final_norm": _norm_def(d),
+        }
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    return init_tree(key, param_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Block application.
+# ---------------------------------------------------------------------------
+
+def block_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                moe_layer: bool, positions: jnp.ndarray,
+                cache: Optional[Any] = None,
+                decode_pos: Optional[jnp.ndarray] = None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    decode = decode_pos is not None
+    if cfg.seq_shard_acts and not decode:
+        x = constrain(x, cfg.batch_axes, "model", None)
+    h = rms_norm(x, p["norm1"])
+
+    new_cache = cache
+    if cfg.family == "ssm":
+        out, nc = ssm_mod.ssm_apply(p["ssm"], h, cfg, cache=cache,
+                                    decode=decode)
+        new_cache = nc if cache is not None else None
+        x = x + out
+    else:
+        cache_attn = cache["attn"] if isinstance(cache, dict) else cache
+        if cfg.use_mla:
+            a_out, c_attn = mla_mod.mla_apply(
+                p["attn"], h, cfg, positions=positions, cache=cache_attn,
+                decode_pos=decode_pos)
+        else:
+            a_out, c_attn = attn_mod.attention_apply(
+                p["attn"], h, cfg, positions=positions, cache=cache_attn,
+                decode_pos=decode_pos)
+        if cfg.family == "hybrid":
+            s_out, c_ssm = ssm_mod.ssm_apply(p["ssm"], h, cfg,
+                                             cache=cache["ssm"]
+                                             if isinstance(cache, dict)
+                                             else None,
+                                             decode=decode)
+            x = (x + p["gate_attn"].astype(x.dtype) * a_out
+                 + p["gate_ssm"].astype(x.dtype) * s_out)
+            new_cache = ({"attn": c_attn, "ssm": c_ssm}
+                         if cache is not None else None)
+        else:
+            x = x + a_out
+            new_cache = c_attn
+        if cfg.seq_shard_acts and not decode:
+            x = constrain(x, cfg.batch_axes, "model", None)
+        h2 = rms_norm(x, p["norm2"])
+        if moe_layer:
+            m_out, aux = moe_mod.moe_apply(p["moe"], h2, cfg)
+        else:
+            m_out = mlp_apply(p["mlp"], h2, cfg.act,
+                              cfg.batch_axes, cfg.tp_axes)
+        x = x + m_out
+    if cfg.seq_shard_acts and not decode:
+        # Constrain the block OUTPUT too: this is the tensor the scan
+        # saves as a residual for the backward pass — left replicated it
+        # would dominate HBM (L x (B,S,d) per microbatch).
+        x = constrain(x, cfg.batch_axes, "model", None)
+    return x, new_cache, aux
+
+
+def _scan_blocks(stack_p, x, cfg, *, moe_layer, positions, caches,
+                 decode_pos, remat: bool, gather_fn=None):
+    """lax.scan over a stacked block-parameter tree.  ``gather_fn``
+    (ZeRO-3) all-gathers one layer's parameter shards just before use;
+    with remat the gather is replayed in the backward pass, which is
+    exactly the ZeRO-3 memory/traffic trade."""
+
+    def body(carry, xs):
+        xc, aux_acc = carry
+        layer_p, cache = xs
+        if gather_fn is not None:
+            layer_p = gather_fn(layer_p)
+        xc, new_cache, aux = block_apply(
+            layer_p, xc, cfg, moe_layer=moe_layer, positions=positions,
+            cache=cache, decode_pos=decode_pos)
+        return (xc, aux_acc + aux), new_cache
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        (stack_p, caches))
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Full forward.
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, Any],
+                 compute_dtype) -> jnp.ndarray:
+    """Token/frontend embedding.  Audio: precomputed frame embeddings;
+    vision: stub patch embeddings spliced in front of the token stream."""
+    if cfg.frontend == "audio":
+        return batch["features"].astype(compute_dtype)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.frontend == "vision" and "img_embeds" in batch:
+        n = cfg.n_frontend_tokens
+        img = batch["img_embeds"].astype(compute_dtype)
+        x = jnp.concatenate([img, x[:, n:]], axis=1)
+    return x
+
+
+def forward(params: dict, cfg: ModelConfig, batch: Dict[str, Any], *,
+            caches: Optional[Any] = None,
+            decode_pos: Optional[jnp.ndarray] = None,
+            remat: Optional[bool] = None,
+            gather_fns: Optional[Dict[str, Any]] = None):
+    """Run the stack.  Returns (logits, new_caches, aux, hidden).
+
+    ``gather_fns`` (ZeRO-3): {"top": fn, "layers": fn, "dense_layers":
+    fn} applied to parameter subtrees before use.
+    """
+    gather_fns = gather_fns or {}
+    if "top" in gather_fns:
+        top = {k: v for k, v in params.items()
+               if k not in ("layers", "dense_layers")}
+        params = {**params, **gather_fns["top"](top)}
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_inputs(params, cfg, batch, cdt)
+    B, S = x.shape[:2]
+    if decode_pos is not None:
+        positions = decode_pos[:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    remat = cfg.remat if remat is None else remat
+
+    none_caches = caches is None
+
+    def cache_for(name):
+        # None is a valid empty pytree: scan zips it with stacked params.
+        return None if none_caches else caches[name]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    if cfg.is_moe and cfg.n_dense_layers:
+        x, aux, nc = _scan_blocks(params["dense_layers"], x, cfg,
+                                  moe_layer=False, positions=positions,
+                                  caches=cache_for("dense_layers"),
+                                  decode_pos=decode_pos, remat=remat,
+                                  gather_fn=gather_fns.get("dense_layers"))
+        aux_total += aux
+        new_caches["dense_layers"] = nc
+    x, aux, nc = _scan_blocks(params["layers"], x, cfg,
+                              moe_layer=cfg.is_moe, positions=positions,
+                              caches=cache_for("layers"),
+                              decode_pos=decode_pos, remat=remat,
+                              gather_fn=gather_fns.get("layers"))
+    aux_total += aux
+    new_caches["layers"] = nc
+
+    if cfg.seq_shard_acts and decode_pos is None:
+        # Un-shard the sequence before the vocab projection: the head
+        # contraction must not mix a seq-sharded operand with the
+        # vocab-sharded weight (GSPMD would otherwise materialize FULL
+        # unsharded f32 copies of embed/head in the backward pass).
+        x = constrain(x, cfg.batch_axes, None, None)
+    hidden = rms_norm(x, params["final_norm"])
+    logits = _project_logits(params, hidden)
+    return logits, (None if none_caches else new_caches), aux_total, hidden
+
+
+def _project_logits(params: dict, hidden: jnp.ndarray) -> jnp.ndarray:
+    # NB: same-dtype operands; asking XLA-CPU for f32 accumulation here
+    # materializes f32 CONVERTS of the (d,V) weight whose sharding the
+    # partitioner then drops (full 17 GiB replicas for a 256k vocab).
+    # The f32 cast happens on the (much smaller) sharded logits instead.
+    logits = jnp.einsum("bsd,dv->bsv", hidden,
+                        params["head"].astype(hidden.dtype))
+    return constrain(logits, BATCH, None,
+                     "model").astype(jnp.float32)  # train-path only
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over all positions; logits may be vocab-sharded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None],
+                                 axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def mtp_loss(params: dict, cfg: ModelConfig, batch: Dict[str, Any],
+             hidden: jnp.ndarray) -> jnp.ndarray:
+    """DeepSeek multi-token-prediction: predict x_{t+2} from h_t and
+    emb(x_{t+1}) through one extra block with the shared head."""
+    p = params["mtp"]
+    tokens, targets = batch["tokens"], batch["targets"]
+    B, S = tokens.shape
+    h_in = rms_norm(hidden[:, :S - 1], p["norm_h"])
+    e_in = rms_norm(
+        jnp.take(params["embed"], tokens[:, 1:], axis=0
+                 ).astype(hidden.dtype), p["norm_e"])
+    x = jnp.concatenate([h_in, e_in], axis=-1) @ p["proj"].astype(
+        hidden.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S - 1)[None], (B, S - 1))
+    x, _, _ = block_apply(p["block"], x, cfg, moe_layer=False,
+                          positions=positions)
+    x = rms_norm(x, p["final_norm"])
+    logits = _project_logits(params, x)
+    return cross_entropy(logits[:, :-1], targets[:, 1:-1])
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: Dict[str, Any],
+            gather_fns: Optional[Dict[str, Any]] = None
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if gather_fns and "top" in gather_fns:
+        top = {k: v for k, v in params.items()
+               if k not in ("layers", "dense_layers")}
+        params = {**params, **gather_fns["top"](top)}
+        gather_fns = {k: v for k, v in gather_fns.items() if k != "top"}
+    logits, _, aux, hidden = forward(params, cfg, batch,
+                                     gather_fns=gather_fns)
+    ce = cross_entropy(logits, batch["targets"])
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.use_mtp:
+        m = mtp_loss(params, cfg, batch, hidden)
+        loss = loss + cfg.mtp_loss_weight * m
+        metrics["mtp"] = m
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Cache construction.
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Stacked per-layer decode caches for the whole model."""
+
+    def one(moe_block: bool):
+        del moe_block
+        if cfg.family == "ssm":
+            return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        if cfg.use_mla:
+            return mla_mod.init_mla_cache(cfg, batch, max_len, dtype)
+        kv = attn_mod.init_cache(cfg, batch, max_len, dtype)
+        if cfg.family == "hybrid":
+            return {"attn": kv, "ssm": ssm_mod.init_ssm_cache(cfg, batch,
+                                                              dtype)}
+        return kv
+
+    def stack_c(c, n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c)
+
+    out = {}
+    if cfg.is_moe and cfg.n_dense_layers:
+        out["dense_layers"] = stack_c(one(False), cfg.n_dense_layers)
+    out["layers"] = stack_c(one(cfg.is_moe),
+                            cfg.n_moe_layers if cfg.is_moe else cfg.n_layers)
+    return out

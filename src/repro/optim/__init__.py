@@ -1,0 +1,7 @@
+"""Optimizers with distributed-state layouts."""
+from . import quant
+from .adamw import (OptConfig, global_norm_sq, init, schedule, state_defs,
+                    update)
+
+__all__ = ["OptConfig", "global_norm_sq", "init", "quant", "schedule",
+           "state_defs", "update"]

@@ -1,0 +1,207 @@
+"""AdamW with distributed-state layout knobs.
+
+Runs entirely on local parameter *shards* inside the manual shard_map
+region (ZeRO-1/2/3 style): every update is elementwise, so no
+collectives are needed beyond the global-grad-norm psum that the step
+function supplies.
+
+Memory knobs per ModelConfig:
+  * ``master_dtype``  — fp32 master copies, or bf16 (update in fp32
+    math, store bf16; >=300B configs).
+  * ``moment_dtype``  — fp32 | bf16 | int8 (block-quantized, quant.py).
+  * ``factored_second_moment`` — Adafactor-style rank-1 v for >=2D
+    tensors (DeepSeek-671B plan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from ..models.layers import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    master_dtype: str = "float32"
+    moment_dtype: str = "float32"
+    factored_second_moment: bool = False
+
+    @staticmethod
+    def from_model(mcfg, **overrides) -> "OptConfig":
+        base = dict(master_dtype=mcfg.master_dtype,
+                    moment_dtype=mcfg.moment_dtype,
+                    factored_second_moment=mcfg.factored_second_moment)
+        base.update(overrides)
+        return OptConfig(**base)
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+# --------------------------------------------------------------------------
+# Moment storage.
+# --------------------------------------------------------------------------
+
+def _store_moment(x: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return quant.quantize(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _load_moment(s, dtype: str) -> jnp.ndarray:
+    if dtype == "int8":
+        return quant.dequantize(s)
+    return s.astype(jnp.float32)
+
+
+def _init_moment(shape, dtype: str):
+    return _store_moment(jnp.zeros(shape, jnp.float32), dtype)
+
+
+def _init_v(shape, cfg: OptConfig):
+    dims = quant.factored_dims(shape) if cfg.factored_second_moment else None
+    if dims is None:
+        return {"full": _init_moment(shape, cfg.moment_dtype)}
+    r, c = dims
+    row_shape = shape[:r] + (shape[r],)
+    col_shape = shape[:r] + (shape[c],)
+    return {"row": jnp.zeros(row_shape, jnp.float32),
+            "col": jnp.zeros(col_shape, jnp.float32)}
+
+
+def _v_update_and_read(v_state, g2: jnp.ndarray, b2: float,
+                       cfg: OptConfig):
+    """Returns (new_state, dense v estimate)."""
+    if "full" in v_state:
+        v = _load_moment(v_state["full"], cfg.moment_dtype)
+        v = b2 * v + (1 - b2) * g2
+        return {"full": _store_moment(v, cfg.moment_dtype)}, v
+    row = b2 * v_state["row"] + (1 - b2) * jnp.mean(g2, axis=-1)
+    col = b2 * v_state["col"] + (1 - b2) * jnp.mean(g2, axis=-2)
+    mean_row = jnp.mean(row, axis=-1, keepdims=True)
+    v = (row[..., :, None] * col[..., None, :]
+         / jnp.maximum(mean_row[..., None], 1e-30))
+    return {"row": row, "col": col}, v
+
+
+# --------------------------------------------------------------------------
+# Public API.
+# --------------------------------------------------------------------------
+
+def init(params, cfg: OptConfig) -> Dict[str, Any]:
+    def leaf(p):
+        state = {"m": _init_moment(p.shape, cfg.moment_dtype),
+                 "v": _init_v(p.shape, cfg)}
+        if cfg.master_dtype == "float32" and p.dtype != jnp.float32:
+            state["master"] = p.astype(jnp.float32)
+        return state
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "params": jax.tree.map(leaf, params)}
+
+
+def _drop_dim(d: ParamDef, dim: int, dtype: str) -> ParamDef:
+    """ParamDef for a tensor that removes one dim of ``d`` (scales,
+    factored moments): shardings shift accordingly."""
+    fsdp = d.fsdp_dim
+    if fsdp is not None:
+        fsdp = None if fsdp == dim else (fsdp - 1 if fsdp > dim else fsdp)
+    return ParamDef(shape=d.shape[:dim] + d.shape[dim + 1:],
+                    tp=d.tp[:dim] + d.tp[dim + 1:],
+                    fsdp_dim=fsdp, dtype=dtype, init="zeros")
+
+
+def state_defs(param_def_tree, cfg: OptConfig):
+    """ParamDef mirror of :func:`init`'s state tree — the single source
+    the launcher uses to derive optimizer-state shardings."""
+
+    def _moment_def(d: ParamDef):
+        if cfg.moment_dtype == "int8":
+            return quant.QTensor(
+                q=dataclasses.replace(d, dtype="int8", init="zeros"),
+                scale=_drop_dim(d, len(d.shape) - 1, "float32")
+                if d.shape else dataclasses.replace(d, dtype="float32",
+                                                    init="zeros"))
+        return dataclasses.replace(d, dtype=cfg.moment_dtype, init="zeros")
+
+    def leaf(d: ParamDef):
+        nd = len(d.shape)
+        state = {"m": _moment_def(d)}
+        if cfg.factored_second_moment and nd >= 2:
+            state["v"] = {"row": _drop_dim(d, nd - 1, "float32"),
+                          "col": _drop_dim(d, nd - 2, "float32")}
+        else:
+            state["v"] = {"full": _moment_def(d)}
+        if cfg.master_dtype == "float32" and d.dtype != "float32":
+            state["master"] = dataclasses.replace(d, dtype="float32")
+        return state
+
+    tree = jax.tree.map(leaf, param_def_tree,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+    return {"step": ParamDef((), (), fsdp_dim=None, dtype="int32",
+                             init="zeros"),
+            "params": tree}
+
+
+def global_norm_sq(grads) -> jnp.ndarray:
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+               for g in jax.tree.leaves(grads))
+
+
+def update(grads, state, params, cfg: OptConfig, *,
+           norm_sq: Optional[jnp.ndarray] = None
+           ) -> Tuple[Any, Dict[str, Any]]:
+    """One AdamW step.  ``norm_sq`` is the *global* squared grad norm
+    (caller psums it across manual axes); local if omitted."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    if norm_sq is None:
+        norm_sq = global_norm_sq(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm
+                       / jnp.maximum(jnp.sqrt(norm_sq), 1e-12))
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def leaf(g, s, p):
+        g = g.astype(jnp.float32) * clip
+        m = _load_moment(s["m"], cfg.moment_dtype)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        new_v_state, v = _v_update_and_read(s["v"], jnp.square(g),
+                                            cfg.b2, cfg)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        master = s.get("master", p).astype(jnp.float32)
+        master = master - lr * (upd + cfg.weight_decay * master)
+        new_s = {"m": _store_moment(m, cfg.moment_dtype),
+                 "v": new_v_state}
+        if "master" in s:
+            new_s["master"] = master
+        return master.astype(p.dtype), new_s
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["params"])
+    new = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [a for a, _ in new])
+    new_state = {"step": step,
+                 "params": jax.tree.unflatten(treedef,
+                                              [b for _, b in new])}
+    return new_params, new_state

@@ -1,0 +1,7 @@
+"""Fault-tolerant, elastic runtime."""
+from . import elastic
+from .fault import (FaultConfig, FaultTolerantRunner, StepStats,
+                    StragglerAbort, supervise)
+
+__all__ = ["FaultConfig", "FaultTolerantRunner", "StepStats",
+           "StragglerAbort", "elastic", "supervise"]

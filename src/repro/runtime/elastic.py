@@ -1,0 +1,51 @@
+"""Elastic re-meshing: rebuild the device mesh from whatever is alive.
+
+At thousand-node scale, node loss is routine.  Because every sharding
+in this framework is *derived* from the mesh at step-build time
+(launch/steps.py), elasticity reduces to: pick the largest supported
+mesh that fits the surviving devices, rebuild the step function, and
+restore parameters from the latest checkpoint (which stores unsharded
+logical arrays).  Nothing else in the stack knows the mesh size.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def viable_mesh_shape(n_devices: int, *, model_parallel: int,
+                      min_data: int = 1) -> Optional[Tuple[int, int]]:
+    """Largest (data, model) grid that fits ``n_devices`` while keeping
+    the TP degree fixed (weights must still fit per device)."""
+    if n_devices < model_parallel * min_data:
+        return None
+    data = n_devices // model_parallel
+    # power-of-two data axis keeps batch divisibility simple
+    data = 1 << int(math.log2(data))
+    return (data, model_parallel)
+
+
+def make_elastic_mesh(*, model_parallel: int,
+                      devices: Optional[Sequence] = None):
+    """Build the biggest healthy mesh available right now."""
+    devices = list(devices if devices is not None else jax.devices())
+    shape = viable_mesh_shape(len(devices), model_parallel=model_parallel)
+    if shape is None:
+        raise RuntimeError(
+            f"only {len(devices)} devices alive; need >= {model_parallel}")
+    data, model = shape
+    used = devices[: data * model]
+    import numpy as np
+    arr = np.array(used).reshape(data, model)
+    mesh = jax.sharding.Mesh(arr, ("data", "model"))
+    return mesh
+
+
+def rescale_batch(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep per-device batch constant across a re-mesh (synchronous DP
+    semantics: the optimizer sees a smaller global batch until capacity
+    returns; lr rescaling is the caller's policy)."""
+    per_device = global_batch // old_data
+    return per_device * new_data

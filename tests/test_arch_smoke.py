@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+forward/train step on CPU; shapes + finiteness asserted.  The FULL
+configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, optim
+from repro.data import DataConfig, batch_for_model
+from repro.models import (applicable_shapes, forward, init_caches,
+                          init_params, loss_fn)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    d = batch_for_model(cfg, DataConfig(seq_len=S, global_batch=B,
+                                        vocab_size=cfg.vocab_size), 0)
+    return jax.tree.map(jnp.asarray, d)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, cfg, b))(params, batch)
+    assert jnp.isfinite(loss), (arch, metrics)
+    assert 0 < float(loss) < 20
+
+    # one optimizer step decreases nothing catastrophic & stays finite
+    ocfg = optim.OptConfig.from_model(cfg, lr=1e-3)
+    state = optim.init(params, ocfg)
+
+    def step(p, s, b):
+        grads, _ = jax.grad(lambda q: loss_fn(q, cfg, b), has_aux=True)(p)
+        return optim.update(grads, s, p, ocfg)
+
+    p2, s2 = jax.jit(step)(params, state, batch)
+    for leaf in jax.tree.leaves(p2):
+        assert jnp.isfinite(leaf.astype(jnp.float32)).all(), arch
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_decode_matches_full_forward(arch):
+    import dataclasses
+    cfg = configs.get_smoke(arch)
+    if cfg.family == "encoder":
+        pytest.skip("encoder-only: no decode")
+    if cfg.is_moe:
+        # Capacity dropping legitimately differs between batched prefill
+        # (tokens compete for expert slots) and single-token decode; use
+        # a no-drop capacity for the numerical-equivalence check.
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_params(cfg, KEY)
+    B, S = 2, 32
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.frontend == "vision":
+        batch["img_embeds"] = jnp.zeros((B, cfg.n_frontend_tokens,
+                                         cfg.d_model), jnp.bfloat16)
+    full, _, _, _ = forward(params, cfg, batch, remat=False)
+
+    caches = init_caches(cfg, B, S)
+    pre = dict(batch)
+    pre["tokens"] = tokens[:, :-1]
+    _, caches, _, _ = forward(params, cfg, pre, caches=caches, remat=False)
+    lg, _, _, _ = forward(params, cfg, {"tokens": tokens[:, -1:]},
+                          caches=caches,
+                          decode_pos=jnp.full((B,), S - 1, jnp.int32),
+                          remat=False)
+    a = np.asarray(lg[:, 0], np.float32)
+    b = np.asarray(full[:, -1], np.float32)
+    # bf16 accumulation-order tolerance
+    assert np.max(np.abs(a - b)) < 0.35, (arch, np.max(np.abs(a - b)))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_shape_cell_applicability(arch):
+    cfg = configs.get(arch)
+    names = {s.name for s in applicable_shapes(cfg)}
+    if cfg.family == "encoder":
+        assert names == {"train_4k", "prefill_32k"}
+    elif cfg.has_ssm or cfg.attn_window:
+        assert names == {"train_4k", "prefill_32k", "decode_32k",
+                         "long_500k"}
+    else:
+        assert names == {"train_4k", "prefill_32k", "decode_32k"}
+
+
+def test_param_counts_match_published():
+    expected = {
+        "qwen3_4b": (4.0, 4.9),
+        "nemotron_4_340b": (330, 350),
+        "codeqwen15_7b": (7, 9),
+        "yi_34b": (33, 36),
+        "internvl2_76b": (68, 78),
+        "hymba_1_5b": (1.4, 1.9),
+        "hubert_xlarge": (0.9, 1.4),
+        "falcon_mamba_7b": (6.8, 7.8),
+        "deepseek_v3_671b": (665, 680),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = configs.get(arch).param_count() / 1e9
+        assert lo <= n <= hi, (arch, n)
+    active = configs.get("deepseek_v3_671b").active_param_count() / 1e9
+    assert 35 <= active <= 40, active

@@ -1,0 +1,98 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (shapes &
+dtypes), interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+@pytest.mark.parametrize("n", [64, 1000, 4096, 10000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_axpy(n, dtype):
+    x, y = _arr((n,), dtype), _arr((n,), dtype)
+    got = ops.axpy(1.7, x, y)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.axpy(1.7, x, y), np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [128, 1000, 8192])
+@pytest.mark.parametrize("radix", [0, 2, 4, 16])
+def test_dotp(n, radix):
+    x, y = _arr((n,)), _arr((n,))
+    np.testing.assert_allclose(ops.dotp(x, y, radix=radix), ref.dotp(x, y),
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(8, 16, 8), (100, 60, 72),
+                                   (256, 512, 128), (129, 257, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul(shape, dtype):
+    m, k, n = shape
+    x, w = _arr((m, k), dtype), _arr((k, n), dtype)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(ops.matmul(x, w), ref.matmul(x, w),
+                               rtol=tol, atol=tol * k ** 0.5)
+
+
+@pytest.mark.parametrize("hw", [(8, 8), (16, 20), (32, 32)])
+def test_conv2d(hw):
+    img = _arr((3, *hw))
+    kern = _arr((3, 3))
+    np.testing.assert_allclose(ops.conv2d(img, kern), ref.conv2d(img, kern),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_dct(n):
+    x = _arr((33, n))
+    np.testing.assert_allclose(ops.dct(x), ref.dct(x), rtol=1e-3, atol=1e-3)
+
+
+def test_dct_orthonormal():
+    b = ref.dct_basis(32)
+    np.testing.assert_allclose(b @ b.T, np.eye(32), atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [16, 64, 256, 1024])
+def test_fft4_vs_numpy(n):
+    re, im = _arr((3, n), scale=0.5), _arr((3, n), scale=0.5)
+    gr, gi = ops.fft4(re, im)
+    idx = np.asarray(ref.digit_reverse_indices(n))
+    want = np.fft.fft(np.asarray(re) + 1j * np.asarray(im), axis=-1)
+    np.testing.assert_allclose(np.asarray(gr)[:, idx], want.real,
+                               rtol=1e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(gi)[:, idx], want.imag,
+                               rtol=1e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("s,d", [(64, 16), (128, 32), (256, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(s, d, causal):
+    q, k, v = (_arr((2, 2, s, d), jnp.float32, 0.5) for _ in range(3))
+    got = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4))
+def test_dotp_tree_equals_central_property(blocks, radix_pow):
+    """k-ary tree reduction == central accumulator for any shape/radix
+    (the paper's invariant: barrier radix never changes the result)."""
+    n = blocks * 333
+    x = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    y = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    central = ops.dotp(x, y, radix=0)
+    tree = ops.dotp(x, y, radix=2 ** radix_pow)
+    np.testing.assert_allclose(central, tree, rtol=1e-5)

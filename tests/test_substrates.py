@@ -1,0 +1,209 @@
+"""Substrate tests: optimizer, quantization, data, checkpoint, fault
+runtime, collectives."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint, optim
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import quant
+from repro.runtime import (FaultConfig, FaultTolerantRunner, StragglerAbort,
+                           elastic)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Quantization.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([(64,), (3, 128), (2, 5, 256), (1,), (7, 3)]),
+       st.floats(1e-4, 1e3))
+def test_quant_roundtrip_error_bound(shape, scale):
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(shape)
+                    * scale, jnp.float32)
+    q = quant.quantize(x)
+    back = quant.dequantize(q)
+    amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= amax / 127.0 * 0.501 + 1e-9).all()
+
+
+def test_adamw_converges_quadratic():
+    """Full int8+factored config still optimizes a quadratic."""
+    cfg = optim.OptConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                          total_steps=200, moment_dtype="int8",
+                          factored_second_moment=True)
+    target = jnp.asarray(np.random.default_rng(1).standard_normal((8, 16)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 16))}
+    state = optim.init(params, cfg)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.mean((q["w"] - target) ** 2))(p)
+        return optim.update(g, s, p, cfg)
+
+    for _ in range(200):
+        params, state = step(params, state)
+    assert float(jnp.mean((params["w"] - target) ** 2)) < 1e-2
+
+
+def test_moment_dtypes_agree():
+    """int8 moments track f32 moments to within quantization error."""
+    target = jnp.ones((4, 64)) * 3
+    outs = {}
+    for md in ("float32", "int8"):
+        cfg = optim.OptConfig(lr=0.02, weight_decay=0.0, warmup_steps=1,
+                              moment_dtype=md)
+        params = {"w": jnp.zeros((4, 64))}
+        state = optim.init(params, cfg)
+        for _ in range(50):
+            g = jax.grad(lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+            params, state = optim.update(g, state, params, cfg)
+        outs[md] = params["w"]
+    np.testing.assert_allclose(outs["float32"], outs["int8"],
+                               rtol=0.15, atol=0.05)
+
+
+def test_schedule_warmup_cosine():
+    cfg = optim.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(optim.schedule(cfg, jnp.asarray(0))) < 0.11
+    assert float(optim.schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(optim.schedule(cfg, jnp.asarray(100))) == pytest.approx(
+        0.1, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline.
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(seed=3, seq_len=64, global_batch=8, vocab_size=1000)
+    s = SyntheticLM(cfg)
+    a = s.batch(5)
+    b = s.batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # host sharding partitions the global batch deterministically
+    h0 = s.batch(5, host_id=0, host_count=2)
+    h1 = s.batch(5, host_id=1, host_count=2)
+    assert h0["tokens"].shape == (4, 64)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    # next-token alignment
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["targets"][:, :-1])
+
+
+def test_data_induction_signal():
+    cfg = DataConfig(seed=0, seq_len=256, global_batch=4, copy_period=64)
+    b = SyntheticLM(cfg).batch(0)
+    t = b["tokens"]
+    # second half of each period copies the first half
+    assert (t[:, 96] == t[:, 64]).all()
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing.
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    for step in (1, 2, 3, 4):
+        checkpoint.save(tmp_path, step, tree)
+    assert checkpoint.latest_step(tmp_path) == 4
+    template = jax.tree.map(jnp.zeros_like, tree)
+    restored, manifest = checkpoint.restore(tmp_path, template)
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    checkpoint.prune(tmp_path, keep=2)
+    assert checkpoint.latest_step(tmp_path) == 4
+    assert len(list(tmp_path.glob("step_*"))) == 2
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A missing manifest (simulated crash) is never considered latest."""
+    tree = {"a": jnp.ones((2,))}
+    checkpoint.save(tmp_path, 1, tree)
+    # fake a torn write
+    torn = tmp_path / "step_00000009"
+    torn.mkdir()
+    (torn / "host_0000.npz").write_bytes(b"garbage")
+    assert checkpoint.latest_step(tmp_path) == 1
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant runtime.
+# ---------------------------------------------------------------------------
+
+def _runner(tmp_path, fail_at=None, slow_at=(), state0=0.0):
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if fail_at is not None and calls["n"] == fail_at:
+            raise RuntimeError("injected node failure")
+        import time
+        if calls["n"] in slow_at:
+            time.sleep(0.05)
+        return state + batch, {"loss": float(state)}
+
+    cfg = FaultConfig(ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=3,
+                      straggler_factor=5.0, max_stragglers=3,
+                      max_restarts=2)
+    return FaultTolerantRunner(cfg, step_fn=step_fn,
+                               batch_fn=lambda step: 1.0,
+                               state_template=jnp.asarray(state0))
+
+
+def test_runner_checkpoints_and_resumes(tmp_path):
+    r = _runner(tmp_path)
+    final = r.run(7)
+    assert float(final) == 7.0
+    assert checkpoint.latest_step(tmp_path / "ckpt") == 6
+    # resume continues from step 7, not from scratch
+    r2 = _runner(tmp_path)
+    assert r2.resume_step() == 7
+    final2 = r2.run(10)
+    assert float(final2) == 10.0
+
+
+def test_supervisor_restarts_after_failure(tmp_path):
+    from repro.runtime import supervise
+    attempts = {"n": 0}
+
+    def make():
+        attempts["n"] += 1
+        return _runner(tmp_path, fail_at=5 if attempts["n"] == 1 else None)
+
+    cfg = FaultConfig(ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=3,
+                      max_restarts=2)
+    final = supervise(make, 8, cfg)
+    assert float(final) == 8.0
+    assert attempts["n"] == 2
+
+
+def test_straggler_detection():
+    import time
+    durations = [0.001] * 10
+    r = FaultTolerantRunner(
+        FaultConfig(straggler_factor=3.0, max_stragglers=2,
+                    ckpt_dir="/tmp/unused_ckpt", ckpt_every=10 ** 9),
+        step_fn=lambda s, b: (s, {}), batch_fn=lambda s: 0,
+        state_template=0)
+    for d in durations:
+        r._watch(d)
+    with pytest.raises(StragglerAbort):
+        r._watch(1.0)
+        r._watch(1.0)
+
+
+def test_elastic_mesh_shapes():
+    assert elastic.viable_mesh_shape(256, model_parallel=16) == (16, 16)
+    assert elastic.viable_mesh_shape(240, model_parallel=16) == (8, 16)
+    assert elastic.viable_mesh_shape(8, model_parallel=16) is None
+    assert elastic.rescale_batch(256, 16, 8) == 128
