@@ -22,14 +22,16 @@ out = {}
 G = 1 << 20  # 1 Mi-element f32 gradient
 
 def wire(fn, mesh, in_spec, axis_names):
-    g = jax.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=in_spec,
-                      axis_names=axis_names, check_vma=False)
+    g = collectives.shard_map_compat(fn, mesh, in_spec, in_spec, axis_names)
     x = jnp.ones((G,), jnp.float32)
     hlo = jax.jit(g).lower(x).compile().as_text()
     return hlo_analysis.analyze(hlo).collective_bytes
 
-mesh2 = jax.make_mesh((2, 4), ("pod", "data"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+try:
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+except (AttributeError, TypeError):  # jax < 0.5
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
 out["flat"] = wire(lambda x: collectives.psum_chain(x, ("data", "pod")),
                    mesh2, P(), {"pod", "data"})
 out["hier"] = wire(

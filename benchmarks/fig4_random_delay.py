@@ -1,51 +1,63 @@
 """Fig. 4a/4b: barrier cycles vs radix vs arrival scatter, and the
-synchronization-free region needed for <10% overhead."""
-import time
+synchronization-free region needed for <10% overhead.
+
+The whole radix x delay x trial grid runs through ONE jitted, vmapped
+call of the sweep engine (:mod:`repro.core.sweep`); fig4b reuses the
+fig4a sweep results instead of re-simulating per (delay, radix) point.
+"""
+import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import barrier, barrier_sim
+from repro.core import barrier, sweep
+
+from . import timing
 
 KEY = jax.random.PRNGKey(0)
 DELAYS = [0.0, 128.0, 512.0, 2048.0]
 SFRS = [500, 1000, 2000, 5000, 10000, 20000]
+N_TRIALS = 16
 
 
-def fig4a():
-    rows = []
-    for radix in barrier.all_radices():
-        sched = barrier.kary_tree(radix)
-        for delay in DELAYS:
-            t0 = time.perf_counter()
-            span = float(barrier_sim.mean_span_cycles(KEY, sched, delay,
-                                                      n_trials=16))
-            us = (time.perf_counter() - t0) * 1e6
-            rows.append((f"fig4a_radix{radix}_delay{int(delay)}", us,
-                         round(span, 1)))
+def run_sweep():
+    """One compiled call for the full grid, timed compile vs steady."""
+    radices = list(barrier.all_radices())
+    res, steady_us, compile_us = timing.measure(
+        lambda: sweep.sweep_barrier(KEY, radices=radices, delays=DELAYS,
+                                    n_trials=N_TRIALS))
+    return res, steady_us, compile_us
+
+
+def fig4a(res, steady_us, compile_us):
+    rows = [("fig4a_sweep_grid", steady_us,
+             f"{res.mean_span.shape[0]}x{res.mean_span.shape[1]}"
+             f"x{N_TRIALS}", compile_us)]
+    spans = np.asarray(res.mean_span)
+    for i, radix in enumerate(np.asarray(res.radices)):
+        for j, delay in enumerate(np.asarray(res.delays)):
+            rows.append((f"fig4a_radix{radix}_delay{int(delay)}", 0.0,
+                         round(float(spans[i, j]), 1), 0.0))
     return rows
 
 
-def fig4b():
+def fig4b(res):
+    """Overhead vs SFR at the best radix per delay — computed from the
+    fig4a sweep results, no re-simulation."""
     rows = []
-    for delay in DELAYS:
-        # best radix per scatter level
-        best = min(
-            ((float(barrier_sim.mean_span_cycles(KEY,
-                                                 barrier.kary_tree(r),
-                                                 delay, n_trials=8)), r)
-             for r in (2, 16, 32, 64, 256, 1024)))
-        radix = best[1]
-        sched = barrier.kary_tree(radix)
+    radices = np.asarray(res.radices)
+    spans = np.asarray(res.mean_span)            # (R, D)
+    resid = np.asarray(res.mean_residency_grid)  # (R, D)
+    for j, delay in enumerate(np.asarray(res.delays)):
+        i = int(np.argmin(spans[:, j]))
+        radix = int(radices[i])
+        barrier_cost = float(resid[i, j])
         for sfr in SFRS:
-            t0 = time.perf_counter()
-            frac = float(barrier_sim.overhead_fraction(
-                KEY, sched, sfr, delay, n_trials=8))
-            us = (time.perf_counter() - t0) * 1e6
+            frac = barrier_cost / (sfr + barrier_cost)
             rows.append((f"fig4b_delay{int(delay)}_sfr{sfr}_radix{radix}",
-                         us, round(frac, 4)))
+                         0.0, round(frac, 4), 0.0))
     return rows
 
 
 def run():
-    return fig4a() + fig4b()
+    res, steady_us, compile_us = run_sweep()
+    return fig4a(res, steady_us, compile_us) + fig4b(res)

@@ -1,10 +1,10 @@
 """Fig. 5: CDF of fastest-vs-slowest PE runtime per kernel/input."""
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import workloads
+
+from . import timing
 
 KEY = jax.random.PRNGKey(1)
 
@@ -14,11 +14,11 @@ def run():
     suite = workloads.benchmark_suite()
     for kernel, dims in suite.items():
         for label, fn in dims.items():
-            t0 = time.perf_counter()
-            arr = fn(KEY)
+            arr, steady_us, compile_us = timing.measure(lambda: fn(KEY))
             gap = float(workloads.cdf_first_last_gap(arr))
             p50 = float(jnp.percentile(arr - jnp.min(arr), 50))
-            us = (time.perf_counter() - t0) * 1e6
-            rows.append((f"fig5_{kernel}_{label}_gap", us, round(gap, 1)))
-            rows.append((f"fig5_{kernel}_{label}_p50", us, round(p50, 1)))
+            rows.append((f"fig5_{kernel}_{label}_gap", steady_us,
+                         round(gap, 1), compile_us))
+            rows.append((f"fig5_{kernel}_{label}_p50", steady_us,
+                         round(p50, 1), compile_us))
     return rows

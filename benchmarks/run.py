@@ -1,6 +1,9 @@
 """Benchmark driver: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+Prints ``name,us_per_call,derived,compile_us`` CSV rows.  Steady-state
+time (``us_per_call``) and one-off compile time are separate columns so
+dispatch/compile overhead can't masquerade as compute (see
+:mod:`benchmarks.timing`); modules that report no timing emit 0.0.
 """
 import sys
 
@@ -13,12 +16,14 @@ def main() -> None:
             ("collectives", collectives_bench),
             ("roofline", roofline_table)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,compile_us")
     for tag, mod in mods:
         if only and tag != only:
             continue
-        for name, us, derived in mod.run():
-            print(f"{name},{us:.1f},{derived}", flush=True)
+        for row in mod.run():
+            name, us, derived = row[:3]
+            compile_us = row[3] if len(row) > 3 else 0.0
+            print(f"{name},{us:.1f},{derived},{compile_us:.1f}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,42 @@
+"""Shared benchmark timing: compile vs steady-state, not dispatch.
+
+JAX dispatch is asynchronous — ``fn()`` returns a future-like array, so
+naive ``perf_counter`` pairs measure Python dispatch, not compute, and
+the first call silently folds in tracing + XLA compilation.  Every
+driver times through :func:`measure`:
+
+* call 1 (blocked on) is timed, then ``warmup`` further calls retire
+  any remaining lazy work;
+* ``iters`` calls, each blocked with ``jax.block_until_ready`` on the
+  whole result pytree -> ``steady_us`` (mean per call);
+* ``compile_us`` = first call minus steady state (floored at 0): the
+  estimated one-off trace + XLA-compile overhead.  When the program
+  was already warm from an earlier measurement it reads ~0 instead of
+  masquerading as a fresh compile.
+
+The two are reported as separate CSV columns so a compile regression
+can't masquerade as a compute win (or vice versa).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Tuple
+
+import jax
+
+
+def measure(fn: Callable[[], Any], *, warmup: int = 1,
+            iters: int = 3) -> Tuple[Any, float, float]:
+    """Time ``fn`` properly; returns ``(result, steady_us, compile_us)``."""
+    t0 = time.perf_counter()
+    result = jax.block_until_ready(fn())
+    first_us = (time.perf_counter() - t0) * 1e6
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = jax.block_until_ready(fn())
+    steady_us = (time.perf_counter() - t0) * 1e6 / max(iters, 1)
+    return result, steady_us, max(0.0, first_us - steady_us)

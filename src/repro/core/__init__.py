@@ -10,22 +10,30 @@ Two coupled layers (DESIGN.md §2):
   and partial synchronization for pod-scale training/serving
   (:mod:`collectives`).
 """
-from . import barrier, barrier_sim, collectives, fiveg, topology, workloads
-from .barrier import (BarrierSchedule, all_radices, central_counter,
-                      kary_tree, partial_barrier)
+from . import (barrier, barrier_sim, collectives, fiveg, sweep, topology,
+               workloads)
+from .barrier import (BarrierSchedule, LevelTable, all_radices,
+                      central_counter, kary_tree, level_table,
+                      partial_barrier, stack_tables)
 from .barrier_sim import (BarrierResult, mean_span_cycles, overhead_fraction,
-                          simulate, simulate_batch, uniform_arrivals)
+                          simulate, simulate_batch, simulate_reference,
+                          simulate_table, uniform_arrivals)
 from .collectives import (FLAT, HIERARCHICAL, SyncConfig, gather_param,
                           make_factored_mesh, partial_psum, shard_slice,
                           sync_gradient, tree_psum)
+from .sweep import (SweepResult, best_radix_per_delay, radix_tables,
+                    simulate_radices, sweep_barrier)
 from .topology import DEFAULT, TeraPoolConfig
 
 __all__ = [
     "BarrierResult", "BarrierSchedule", "DEFAULT", "FLAT", "HIERARCHICAL",
-    "SyncConfig", "TeraPoolConfig", "all_radices", "barrier", "barrier_sim",
+    "LevelTable", "SweepResult", "SyncConfig", "TeraPoolConfig",
+    "all_radices", "barrier", "barrier_sim", "best_radix_per_delay",
     "central_counter", "collectives", "fiveg", "gather_param", "kary_tree",
-    "make_factored_mesh", "mean_span_cycles", "overhead_fraction",
-    "partial_barrier", "partial_psum", "shard_slice", "simulate",
-    "simulate_batch", "sync_gradient", "topology", "tree_psum",
+    "level_table", "make_factored_mesh", "mean_span_cycles",
+    "overhead_fraction", "partial_barrier", "partial_psum", "radix_tables",
+    "shard_slice", "simulate", "simulate_batch", "simulate_radices",
+    "simulate_reference", "simulate_table", "stack_tables", "sweep",
+    "sweep_barrier", "sync_gradient", "topology", "tree_psum",
     "uniform_arrivals", "workloads",
 ]

@@ -17,8 +17,12 @@ Partial barriers synchronize a contiguous subset of the cluster (e.g. the
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import List, Sequence
+from typing import List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
 
 from .topology import DEFAULT, TeraPoolConfig
 
@@ -104,3 +108,83 @@ def all_radices(n_pes: int | None = None,
     """All power-of-two radices 2..N (N == central counter)."""
     n = int(n_pes if n_pes is not None else cfg.n_pes)
     return [1 << i for i in range(1, int(math.log2(n)) + 1)]
+
+
+# ---------------------------------------------------------------------------
+# Padded level tables: a dense, fixed-shape encoding of any schedule.
+# ---------------------------------------------------------------------------
+
+class LevelTable(NamedTuple):
+    """Dense ``(max_levels,)`` encoding of a :class:`BarrierSchedule`.
+
+    Every tree over ``n_pes`` cores fits in ``log2(n_pes)`` levels (the
+    radix-2 depth), so padding each table to that depth gives every
+    schedule of a given cluster size the *same array shapes*: the
+    simulator compiles once and sweeps radices as data.  Padding levels
+    are the identity — ``group_size == 1`` (each survivor alone at its
+    counter), zero latency and zero software overhead — so they pass
+    timings through unchanged.
+
+    Being a NamedTuple of arrays, a table is a JAX pytree: it can be
+    ``vmap``-ed over a stacked leading axis (see :func:`stack_tables`)
+    and fed straight through ``lax.scan``.
+    """
+
+    group_sizes: jnp.ndarray    # (L,) int32, 1 past the real depth
+    latencies: jnp.ndarray      # (L,) float32, 0 past the real depth
+    instr_cycles: jnp.ndarray   # (L,) float32, 0 past the real depth
+
+    @property
+    def max_levels(self) -> int:
+        return self.group_sizes.shape[-1]
+
+
+def max_depth(n_pes: int) -> int:
+    """Depth of the deepest tree over ``n_pes`` cores (radix 2)."""
+    return max(1, int(math.log2(n_pes)))
+
+
+@functools.lru_cache(maxsize=None)
+def _level_table_cached(schedule: BarrierSchedule, max_levels: int,
+                        cfg: TeraPoolConfig) -> LevelTable:
+    sizes = [lvl.group_size for lvl in schedule.levels]
+    lats = [float(lvl.latency) for lvl in schedule.levels]
+    instr = [float(cfg.instr_per_level)] * len(sizes)
+    pad = max_levels - len(sizes)
+    if pad < 0:
+        raise ValueError(
+            f"schedule has {len(sizes)} levels, max_levels={max_levels}")
+    return LevelTable(
+        group_sizes=jnp.asarray(sizes + [1] * pad, jnp.int32),
+        latencies=jnp.asarray(lats + [0.0] * pad, jnp.float32),
+        instr_cycles=jnp.asarray(instr + [0.0] * pad, jnp.float32),
+    )
+
+
+def level_table(schedule: BarrierSchedule, max_levels: int | None = None,
+                cfg: TeraPoolConfig = DEFAULT) -> LevelTable:
+    """Encode ``schedule`` as a padded :class:`LevelTable`.
+
+    ``max_levels`` defaults to ``log2(schedule.n_pes)`` so that *all*
+    power-of-two radices over the same cluster share one table shape —
+    and hence one compiled simulator.
+    """
+    if max_levels is None:
+        max_levels = max_depth(schedule.n_pes)
+    return _level_table_cached(schedule, int(max_levels), cfg)
+
+
+def stack_tables(schedules: Sequence[BarrierSchedule],
+                 cfg: TeraPoolConfig = DEFAULT) -> LevelTable:
+    """Stack the tables of same-``n_pes`` schedules along a new leading
+    axis, ready to ``vmap`` one compiled simulate over the whole radix
+    sweep."""
+    if not schedules:
+        raise ValueError("no schedules to stack")
+    n = schedules[0].n_pes
+    if any(s.n_pes != n for s in schedules):
+        raise ValueError("stacked schedules must share n_pes")
+    depth = max(max_depth(n),
+                max(s.n_levels for s in schedules))
+    tables = [level_table(s, depth, cfg) for s in schedules]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *tables)

@@ -14,18 +14,36 @@ machine model of :mod:`repro.core.topology`:
   wakeup unit raises the hardwired lines and all sleeping PEs resume
   from WFI simultaneously.
 
-Everything is pure JAX, fully vectorized over groups, and `vmap`-able
-over Monte-Carlo trials.
+Two implementations share the model:
+
+* :func:`simulate` — the production path.  The schedule is encoded as a
+  fixed-shape, identity-padded :class:`~repro.core.barrier.LevelTable`
+  and the level walk is a single jitted ``lax.scan``: no Python control
+  flow, no shape-changing reshapes, so every power-of-two radix over
+  the same cluster reuses ONE compiled program (sweeps via
+  :mod:`repro.core.sweep` vmap it over whole radix x delay grids).
+* :func:`simulate_reference` — the original per-level Python loop,
+  kept verbatim as the equivalence oracle (tests/test_sweep.py asserts
+  the two agree bit-for-bit).
+
+Everything is pure JAX and `vmap`-able over Monte-Carlo trials.
 """
 from __future__ import annotations
 
+import collections
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .barrier import BarrierSchedule
+from .barrier import BarrierSchedule, LevelTable, level_table
 from .topology import DEFAULT, TeraPoolConfig
+
+# Incremented once per *trace* of the scanned core; jit caching means a
+# whole radix x delay x trial sweep costs a single increment.  Tests use
+# it to prove the one-compile property.
+TRACE_COUNTS = collections.Counter()
 
 
 class BarrierResult(NamedTuple):
@@ -59,17 +77,114 @@ def _serialize_group(ready: jnp.ndarray, latency: int,
     return start[..., -1] + latency
 
 
+# ---------------------------------------------------------------------------
+# Scanned core over a padded level table (the one-compile path).
+# ---------------------------------------------------------------------------
+
+def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
+               cfg: TeraPoolConfig) -> BarrierResult:
+    """One barrier episode as a ``lax.scan`` over the padded level table.
+
+    The carried state keeps a fixed shape across levels: ``ready`` is
+    always ``(n_pes,)``, with the ``m`` current survivors compacted into
+    the prefix ``ready[:m]`` and the tail masked to ``+inf``.  Each
+    level serializes the per-group atomics with the same max-plus
+    reduction as :func:`_serialize_group`, but expressed through
+    ``lexsort`` + ``segment_max`` so the group size can be a *traced*
+    value: group membership is ``index // g`` and the within-group
+    arrival rank is the index mod ``g`` after a (group, time) lexsort —
+    every group holds exactly ``g`` contiguous slots, so the sort packs
+    each group's arrivals, in order, into its own slot range.
+
+    Identity padding levels (g=1, latency=0, instr=0) map each survivor
+    to its own counter with no cost, so timings pass through unchanged
+    and all radices of one cluster share this single compiled program.
+    """
+    n = arrivals.shape[-1]
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    idx = jnp.arange(n)
+    svc = jnp.float32(cfg.bank_service_cycles)
+
+    # Level 0 entry: call, address computation, atomic issue.
+    ready0 = arrivals + cfg.instr_per_level
+
+    def step(carry, level):
+        ready, m = carry
+        g, lat, instr = level
+        seg = idx // g
+        order = jnp.lexsort((ready, seg))
+        a = ready[order]
+        rank = (idx % g).astype(jnp.float32)
+        last = jax.ops.segment_max(a - rank * svc, seg, num_segments=n)
+        done = last + (g - 1).astype(jnp.float32) * svc + lat
+        # Survivors run the compare/branch + counter-reset + next-level
+        # setup before issuing the next atomic; compact them to the
+        # prefix and re-mask the tail.
+        m = m // g
+        ready = jnp.where(idx < m, done + instr, jnp.inf)
+        return (ready, m), None
+
+    TRACE_COUNTS["scan_core"] += 1
+    levels = (table.group_sizes, table.latencies, table.instr_cycles)
+    (ready, _), _ = jax.lax.scan(step, (ready0, jnp.int32(n)), levels)
+
+    exit_time = ready[0] + cfg.wakeup_cycles
+    last_arrival = jnp.max(arrivals, axis=-1)
+    return BarrierResult(
+        exit_time=exit_time,
+        last_arrival=last_arrival,
+        span_cycles=exit_time - last_arrival,
+        mean_residency=jnp.mean(exit_time - arrivals, axis=-1),
+    )
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _simulate_flat(arrivals: jnp.ndarray, table: LevelTable,
+                   cfg: TeraPoolConfig) -> BarrierResult:
+    """Jitted (trials, n_pes) batch of the scanned core."""
+    return jax.vmap(lambda a: _scan_core(a, table, cfg))(arrivals)
+
+
+def simulate_table(arrivals: jnp.ndarray, table: LevelTable,
+                   cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
+    """Simulate directly from a padded :class:`LevelTable`.
+
+    Accepts any leading batch shape on ``arrivals``; all batch entries
+    run through one jitted, vmapped program.
+    """
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    batch = arrivals.shape[:-1]
+    flat = arrivals.reshape((-1, arrivals.shape[-1]))
+    res = _simulate_flat(flat, table, cfg)
+    return BarrierResult(*(x.reshape(batch) for x in res))
+
+
 def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
              cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
-    """Simulate one barrier episode.
+    """Simulate one barrier episode (or a leading batch of them).
 
     Args:
-      arrivals: (n_pes,) per-PE barrier-entry cycles (float or int).
+      arrivals: (..., n_pes) per-PE barrier-entry cycles (float or int).
       schedule: static tree structure from :mod:`repro.core.barrier`.
       cfg: machine model.
 
     Returns:
-      :class:`BarrierResult`.
+      :class:`BarrierResult` with the leading batch shape of ``arrivals``.
+    """
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    if arrivals.shape[-1] != schedule.n_pes:
+        raise ValueError(
+            f"arrivals has {arrivals.shape[-1]} PEs, schedule expects "
+            f"{schedule.n_pes}")
+    return simulate_table(arrivals, level_table(schedule, cfg=cfg), cfg)
+
+
+def simulate_reference(arrivals: jnp.ndarray, schedule: BarrierSchedule,
+                       cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
+    """The seed per-level Python loop, kept as the equivalence oracle.
+
+    Retraces per schedule (shape-changing reshapes); use only in tests
+    and spot checks.
     """
     arrivals = jnp.asarray(arrivals, jnp.float32)
     if arrivals.shape[-1] != schedule.n_pes:
@@ -102,8 +217,8 @@ def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
 
 def simulate_batch(arrivals: jnp.ndarray, schedule: BarrierSchedule,
                    cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
-    """vmap of :func:`simulate` over a leading Monte-Carlo axis."""
-    return jax.vmap(lambda a: simulate(a, schedule, cfg))(arrivals)
+    """Batch of :func:`simulate` over a leading Monte-Carlo axis."""
+    return simulate(arrivals, schedule, cfg)
 
 
 def uniform_arrivals(key: jax.Array, max_delay: float, n_pes: int,

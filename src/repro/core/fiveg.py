@@ -22,12 +22,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from . import barrier, barrier_sim
+from .barrier import LevelTable
+from .barrier_sim import _scan_core
 from .topology import DEFAULT, TeraPoolConfig
 
 
@@ -77,11 +80,9 @@ def _epoch_arrivals(key: jax.Array, start: jnp.ndarray, work: float,
                                              maxval=jitter)
 
 
-def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
-                 sync: str = "partial", radix: int = 32,
-                 cfg: TeraPoolConfig = DEFAULT) -> FiveGResult:
-    """Simulate the full OFDM + beamforming pipeline under one barrier
-    strategy.  ``sync`` in {"central", "tree", "partial"}."""
+def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
+                       cfg: TeraPoolConfig):
+    """Stage + global schedules and the partial-group count for a mode."""
     n = cfg.n_pes
     if sync == "central":
         stage_sched = barrier.central_counter(cfg=cfg)
@@ -95,6 +96,105 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     else:
         raise ValueError(f"unknown sync mode {sync!r}")
     global_sched = barrier.kary_tree(min(radix, 32), cfg=cfg)
+    return stage_sched, global_sched, partial_groups
+
+
+@partial(jax.jit,
+         static_argnames=("n_epochs", "partial_groups", "n_pes", "cfg"))
+def _app_core(key: jax.Array, stage_table: LevelTable,
+              global_table: LevelTable, epoch_work: jnp.ndarray,
+              jitter: jnp.ndarray, mm_work: jnp.ndarray, *, n_epochs: int,
+              partial_groups: int, n_pes: int,
+              cfg: TeraPoolConfig):
+    """Scanned epoch pipeline: one compile per sync mode.
+
+    The epoch loop is a ``lax.scan`` over pre-split keys; the barrier
+    radix lives in the (traced) level-table values, so sweeping it
+    reuses the compiled program.  ``partial_groups`` shapes the reshape
+    and is the only mode-dependent static.
+    """
+    keys = jax.random.split(key, n_epochs + 2)
+    fft_pes = n_pes // partial_groups
+
+    def epoch(carry, k):
+        t, acc = carry
+        arr = _epoch_arrivals(k, t, epoch_work, jitter, n_pes)
+        if partial_groups > 1:
+            grp = arr.reshape(partial_groups, fft_pes)
+            res = jax.vmap(lambda a: _scan_core(a, stage_table, cfg))(grp)
+            t = jnp.repeat(res.exit_time, fft_pes)
+            acc = acc + jnp.mean(res.mean_residency)
+        else:
+            res = _scan_core(arr, stage_table, cfg)
+            t = jnp.full((n_pes,), res.exit_time)
+            acc = acc + res.mean_residency
+        return (t, acc), None
+
+    t = jnp.zeros((n_pes,), jnp.float32)   # per-PE current time
+    sync_acc = jnp.asarray(0.0)            # accumulated mean barrier cycles
+    (t, sync_acc), _ = jax.lax.scan(epoch, (t, sync_acc), keys[:n_epochs])
+
+    # FFT -> beamforming data dependency: one global barrier.
+    res = _scan_core(t, global_table, cfg)
+    t = jnp.full((n_pes,), res.exit_time)
+    sync_acc = sync_acc + res.mean_residency
+
+    # Beamforming MATMUL: (N_B x N_RX) @ (N_RX x N_SC), column-wise over
+    # all PEs; concurrent row reads -> moderate contention scatter.
+    arr = _epoch_arrivals(keys[n_epochs], t, mm_work, 0.05 * mm_work, n_pes)
+    res = _scan_core(arr, global_table, cfg)
+    return res.exit_time, sync_acc + res.mean_residency
+
+
+def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
+                 sync: str = "partial", radix: int = 32,
+                 cfg: TeraPoolConfig = DEFAULT) -> FiveGResult:
+    """Simulate the full OFDM + beamforming pipeline under one barrier
+    strategy.  ``sync`` in {"central", "tree", "partial"}.
+
+    The ~25-epoch pipeline runs as one jitted ``lax.scan``; changing the
+    radix (or any timing constant) does not retrace.
+    """
+    n = cfg.n_pes
+    stage_sched, global_sched, partial_groups = _resolve_schedules(
+        app, sync, radix, cfg)
+    stage_table = barrier.level_table(stage_sched, cfg=cfg)
+    global_table = barrier.level_table(global_sched, cfg=cfg)
+
+    epoch_work = app.stage_cycles * app.ffts_per_round
+    jitter = app.stage_jitter_frac * epoch_work
+    n_epochs = app.rounds * app.n_stages
+    outs_per_pe = app.n_beams * app.n_sc / n
+    mm_work = outs_per_pe * app.n_rx * app.mac_cycles
+
+    total, sync_acc = _app_core(
+        key, stage_table, global_table, jnp.float32(epoch_work),
+        jnp.float32(jitter), jnp.float32(mm_work), n_epochs=n_epochs,
+        partial_groups=partial_groups, n_pes=n, cfg=cfg)
+
+    # Serial single-core reference (no barriers, same per-PE work model).
+    fft_work = app.n_rx * app.n_stages * app.fft_pes * app.stage_cycles
+    mm_serial = app.n_beams * app.n_sc * app.n_rx * app.mac_cycles
+    serial = jnp.asarray(fft_work + mm_serial, jnp.float32)
+
+    return FiveGResult(
+        total_cycles=total,
+        sync_cycles=sync_acc,
+        sync_fraction=sync_acc / total,
+        serial_cycles=serial,
+        speedup_serial=serial / total,
+    )
+
+
+def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
+                           sync: str = "partial", radix: int = 32,
+                           cfg: TeraPoolConfig = DEFAULT) -> FiveGResult:
+    """The seed unrolled epoch loop over the per-level reference
+    simulator — the equivalence oracle for :func:`simulate_app`.
+    Retraces every epoch; use only in tests."""
+    n = cfg.n_pes
+    stage_sched, global_sched, partial_groups = _resolve_schedules(
+        app, sync, radix, cfg)
 
     epoch_work = app.stage_cycles * app.ffts_per_round
     jitter = app.stage_jitter_frac * epoch_work
@@ -108,25 +208,24 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         arr = _epoch_arrivals(keys[e], t, epoch_work, jitter, n)
         if partial_groups > 1:
             grp = arr.reshape(partial_groups, app.fft_pes)
-            res = barrier_sim.simulate_batch(grp, stage_sched, cfg)
+            res = barrier_sim.simulate_reference(grp, stage_sched, cfg)
             t = jnp.repeat(res.exit_time, app.fft_pes)
             sync_acc = sync_acc + jnp.mean(res.mean_residency)
         else:
-            res = barrier_sim.simulate(arr, stage_sched, cfg)
+            res = barrier_sim.simulate_reference(arr, stage_sched, cfg)
             t = jnp.full((n,), res.exit_time)
             sync_acc = sync_acc + res.mean_residency
 
     # FFT -> beamforming data dependency: one global barrier.
-    res = barrier_sim.simulate(t, global_sched, cfg)
+    res = barrier_sim.simulate_reference(t, global_sched, cfg)
     t = jnp.full((n,), res.exit_time)
     sync_acc = sync_acc + res.mean_residency
 
-    # Beamforming MATMUL: (N_B x N_RX) @ (N_RX x N_SC), column-wise over
-    # all PEs; concurrent row reads -> moderate contention scatter.
+    # Beamforming MATMUL (see _app_core).
     outs_per_pe = app.n_beams * app.n_sc / n
     mm_work = outs_per_pe * app.n_rx * app.mac_cycles
     arr = _epoch_arrivals(keys[-2], t, mm_work, 0.05 * mm_work, n)
-    res = barrier_sim.simulate(arr, global_sched, cfg)
+    res = barrier_sim.simulate_reference(arr, global_sched, cfg)
     total = res.exit_time
     sync_acc = sync_acc + res.mean_residency
 

@@ -1,0 +1,116 @@
+"""One-compile design-space sweeps over barrier radices and arrival
+scatters.
+
+The paper's whole result set (Figs. 4-7) is a sweep: barrier radix x
+arrival scatter x Monte-Carlo trial.  Because every power-of-two radix
+over one cluster shares a padded :class:`~repro.core.barrier.LevelTable`
+shape, the full grid runs through ONE jitted, ``vmap``-ed program —
+sweeping the radix knob costs one compile, not one per design point.
+
+Two entry points:
+
+* :func:`sweep_barrier` — the Fig. 4 grid: stacked radix tables x
+  uniform-scatter delays x trials, all inside a single jit.  The
+  per-delay arrivals are the seed's ``uniform_arrivals`` bit-for-bit
+  (``uniform(0, d) == d * uniform(0, 1)`` under one key), so results
+  match the per-point seed path exactly.
+* :func:`simulate_radices` — fixed arrivals (e.g. one kernel's epoch,
+  Fig. 6) swept across a radix stack in one call.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import barrier
+from .barrier import LevelTable
+from .barrier_sim import BarrierResult, _scan_core
+from .topology import DEFAULT, TeraPoolConfig
+
+
+class SweepResult(NamedTuple):
+    """Per-point timings over a (radix, delay, trial) grid.
+
+    Every field is ``(n_radices, n_delays, n_trials)``; ``radices`` and
+    ``delays`` echo the grid axes for self-describing results.
+    """
+
+    radices: jnp.ndarray          # (R,) int32
+    delays: jnp.ndarray           # (D,) float32
+    exit_time: jnp.ndarray        # (R, D, T)
+    last_arrival: jnp.ndarray     # (R, D, T)
+    span_cycles: jnp.ndarray      # (R, D, T)
+    mean_residency: jnp.ndarray   # (R, D, T)
+
+    @property
+    def mean_span(self) -> jnp.ndarray:
+        """(R, D) Fig. 4a metric, averaged over trials."""
+        return jnp.mean(self.span_cycles, axis=-1)
+
+    @property
+    def mean_residency_grid(self) -> jnp.ndarray:
+        """(R, D) mean per-PE barrier residency, averaged over trials."""
+        return jnp.mean(self.mean_residency, axis=-1)
+
+
+def radix_tables(radices: Sequence[int], n_pes: int | None = None,
+                 cfg: TeraPoolConfig = DEFAULT) -> LevelTable:
+    """Stacked ``(R, max_levels)`` level tables for a radix sweep."""
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    scheds = [barrier.kary_tree(r, n_pes=n, cfg=cfg) for r in radices]
+    return barrier.stack_tables(scheds, cfg)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _sweep_grid(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
+                cfg: TeraPoolConfig) -> BarrierResult:
+    """(R, D, T) grid through one compiled program.
+
+    ``unit`` is a (T, n_pes) block of standard uniforms; scaling by each
+    delay reproduces ``uniform_arrivals`` for that delay exactly.
+    """
+    arrivals = delays[:, None, None] * unit[None, :, :]      # (D, T, N)
+    per_trial = jax.vmap(lambda tab, a: _scan_core(a, tab, cfg),
+                         in_axes=(None, 0))                  # over T
+    per_delay = jax.vmap(per_trial, in_axes=(None, 0))       # over D
+    per_radix = jax.vmap(per_delay, in_axes=(0, None))       # over R
+    return per_radix(tables, arrivals)
+
+
+def sweep_barrier(key: jax.Array, radices: Sequence[int] | None = None,
+                  delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
+                  n_pes: int | None = None, n_trials: int = 16,
+                  cfg: TeraPoolConfig = DEFAULT) -> SweepResult:
+    """Run the full radix x delay x trial grid in one compiled call."""
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    if radices is None:
+        radices = barrier.all_radices(n, cfg)
+    tables = radix_tables(radices, n, cfg)
+    unit = jax.random.uniform(key, (n_trials, n), jnp.float32, 0.0, 1.0)
+    d = jnp.asarray(delays, jnp.float32)
+    res = _sweep_grid(tables, d, unit, cfg)
+    return SweepResult(radices=jnp.asarray(list(radices), jnp.int32),
+                       delays=d, **res._asdict())
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _radix_stack(tables: LevelTable, arrivals: jnp.ndarray,
+                 cfg: TeraPoolConfig) -> BarrierResult:
+    return jax.vmap(lambda tab: _scan_core(arrivals, tab, cfg))(tables)
+
+
+def simulate_radices(arrivals: jnp.ndarray, radices: Sequence[int],
+                     cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
+    """Simulate ONE arrival vector under every radix in ``radices``
+    (Fig. 6's per-kernel radix scan), vmapped through one compile."""
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    tables = radix_tables(radices, arrivals.shape[-1], cfg)
+    return _radix_stack(tables, arrivals, cfg)
+
+
+def best_radix_per_delay(res: SweepResult) -> jnp.ndarray:
+    """(D,) radix minimizing the mean Fig. 4a span at each delay."""
+    return res.radices[jnp.argmin(res.mean_span, axis=0)]

@@ -121,7 +121,8 @@ def _moe_local(p: dict, x: jnp.ndarray, cfg: ModelConfig
 
 
 def _dp_axes_for(x: jnp.ndarray, batch_axes=BATCH):
-    mesh = jax.sharding.get_abstract_mesh()
+    get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    mesh = get_mesh() if get_mesh is not None else None
     if mesh is None or mesh.empty:
         return (), None
     axes = tuple(
@@ -176,11 +177,11 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig
                 aux_l = jax.lax.psum(aux_l, a)
             return o, aux_l / n_dp
 
+        from ..core.collectives import shard_map_compat
         p_specs = jax.tree.map(lambda _: P(), routed)
-        fn = jax.shard_map(local, mesh=mesh,
-                           in_specs=(p_specs, P(dp_e, None, None)),
-                           out_specs=(P(dp_e, None, None), P()),
-                           axis_names=set(dp), check_vma=False)
+        fn = shard_map_compat(local, mesh,
+                              (p_specs, P(dp_e, None, None)),
+                              (P(dp_e, None, None), P()), dp)
         out, aux = fn(routed, x)
     if "shared_in" in p:
         out = out + _shared_experts(p, x.reshape(out.shape),
