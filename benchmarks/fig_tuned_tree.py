@@ -1,0 +1,59 @@
+"""Tuned mixed-radix trees vs the best uniform radix (the paper's
+Sec. 5 fine-tuning step, generalized): the exhaustive composition x
+delay x trial sweep runs through ONE compiled program, and the winning
+composition at each arrival scatter is reported against the best
+uniform-radix tree on the Fig. 4a mean-span metric.  A second block
+reports the 5G application under the tuned sync modes (tuned partial
+stage trees + tuned global tree) next to the paper's fixed-radix
+strategies.
+"""
+import jax
+
+from repro.core import fiveg, tuning
+
+from . import timing
+
+KEY = jax.random.PRNGKey(0)
+DELAYS = [0.0, 128.0, 512.0, 2048.0]
+N_TRIALS = 4   # the composition axis (512 at N=1024) dominates runtime
+
+
+def tuned_vs_uniform():
+    res, steady_us, compile_us = timing.measure(
+        lambda: tuning.tune_barrier(KEY, delays=DELAYS, n_trials=N_TRIALS),
+        warmup=0, iters=1)
+    n_sched = len(res.schedules)
+    rows = [("tuned_sweep_grid", steady_us,
+             f"{n_sched}x{len(DELAYS)}x{N_TRIALS}", compile_us)]
+    for p in tuning.best_per_delay(res):
+        d = int(p.delay)
+        rows.append((f"tuned_delay{d}_best_{p.schedule.name}", 0.0,
+                     round(p.mean_span, 1), 0.0))
+        rows.append((f"tuned_delay{d}_uniform_{p.uniform_schedule.name}",
+                     0.0, round(p.uniform_span, 1), 0.0))
+        rows.append((f"tuned_delay{d}_gain", 0.0,
+                     round(p.uniform_span / p.mean_span, 4), 0.0))
+    rows.append(("tuned_pareto_front", 0.0,
+                 "|".join(s.name for s in tuning.pareto_schedules(res)),
+                 0.0))
+    return rows
+
+
+def tuned_5g():
+    app = fiveg.FiveGConfig(n_rx=16, ffts_per_round=1)
+    res, steady_us, compile_us = timing.measure(
+        lambda: fiveg.compare_barriers(
+            KEY, app, radix=32,
+            modes=("central", "partial", "tuned", "tuned_partial")),
+        warmup=0, iters=1)
+    rows = [("tuned_5g_compare", steady_us, "4modes", compile_us)]
+    for mode in ("partial", "tuned", "tuned_partial"):
+        rows.append((f"tuned_5g_speedup_{mode}", 0.0,
+                     round(float(res[f"speedup_{mode}"]), 3), 0.0))
+        rows.append((f"tuned_5g_syncfrac_{mode}", 0.0,
+                     round(float(res[mode].sync_fraction), 4), 0.0))
+    return rows
+
+
+def run():
+    return tuned_vs_uniform() + tuned_5g()

@@ -4,36 +4,47 @@ Two coupled layers (DESIGN.md §2):
 
 * **Faithful reproduction** — a cycle-level simulator of TeraPool barrier
   synchronization (:mod:`topology`, :mod:`barrier`, :mod:`barrier_sim`),
-  the kernel arrival-time models (:mod:`workloads`) and the full 5G
-  OFDM + beamforming application (:mod:`fiveg`).
+  one-compile design-space sweeps and the exhaustive mixed-radix tuner
+  (:mod:`sweep`, :mod:`tuning`), the kernel arrival-time models
+  (:mod:`workloads`) and the full 5G OFDM + beamforming application
+  (:mod:`fiveg`).
 * **TPU transplant** — radix-tunable hierarchical collective schedules
   and partial synchronization for pod-scale training/serving
   (:mod:`collectives`).
 """
 from . import (barrier, barrier_sim, collectives, fiveg, sweep, topology,
-               workloads)
+               tuning, workloads)
 from .barrier import (BarrierSchedule, LevelTable, all_radices,
-                      central_counter, kary_tree, level_table,
-                      partial_barrier, stack_tables)
+                      central_counter, compose, describe, kary_tree,
+                      level_table, mixed_radix_tree, partial_barrier,
+                      schedule_name, stack_tables)
 from .barrier_sim import (BarrierResult, mean_span_cycles, overhead_fraction,
-                          simulate, simulate_batch, simulate_reference,
-                          simulate_table, uniform_arrivals)
+                          simulate, simulate_reference, simulate_table,
+                          uniform_arrivals)
 from .collectives import (FLAT, HIERARCHICAL, SyncConfig, gather_param,
                           make_factored_mesh, partial_psum, shard_slice,
                           sync_gradient, tree_psum)
 from .sweep import (SweepResult, best_radix_per_delay, radix_tables,
-                    simulate_radices, sweep_barrier)
+                    simulate_radices, simulate_schedules, sweep_barrier,
+                    sweep_schedules)
 from .topology import DEFAULT, TeraPoolConfig
+from .tuning import (TunedPoint, all_schedules, best_per_delay,
+                     best_schedule, enumerate_compositions,
+                     hierarchy_compositions, pareto_schedules, tune_barrier)
 
 __all__ = [
     "BarrierResult", "BarrierSchedule", "DEFAULT", "FLAT", "HIERARCHICAL",
     "LevelTable", "SweepResult", "SyncConfig", "TeraPoolConfig",
-    "all_radices", "barrier", "barrier_sim", "best_radix_per_delay",
-    "central_counter", "collectives", "fiveg", "gather_param", "kary_tree",
-    "level_table", "make_factored_mesh", "mean_span_cycles",
-    "overhead_fraction", "partial_barrier", "partial_psum", "radix_tables",
-    "shard_slice", "simulate", "simulate_batch", "simulate_radices",
+    "TunedPoint", "all_radices", "all_schedules", "barrier", "barrier_sim",
+    "best_per_delay", "best_radix_per_delay", "best_schedule",
+    "central_counter", "collectives", "compose", "describe",
+    "enumerate_compositions", "fiveg", "gather_param",
+    "hierarchy_compositions", "kary_tree", "level_table",
+    "make_factored_mesh", "mean_span_cycles", "mixed_radix_tree",
+    "overhead_fraction", "pareto_schedules", "partial_barrier",
+    "partial_psum", "radix_tables", "schedule_name", "shard_slice",
+    "simulate", "simulate_radices", "simulate_schedules",
     "simulate_reference", "simulate_table", "stack_tables", "sweep",
-    "sweep_barrier", "sync_gradient", "topology", "tree_psum",
-    "uniform_arrivals", "workloads",
+    "sweep_barrier", "sweep_schedules", "sync_gradient", "topology",
+    "tree_psum", "tune_barrier", "tuning", "uniform_arrivals", "workloads",
 ]

@@ -1,15 +1,23 @@
-"""Barrier schedules: central-counter, k-ary tree and partial barriers.
+"""Barrier schedules: mixed-radix trees and their algebra.
 
 A *schedule* is the static structure of the arrival tree (Sec. 3 of the
 paper): how many PEs synchronize per shared counter at every level, and
 the locality class (hence latency) of each level's counters.
 
-The radix ``k`` spans the whole design space:
-  * ``k == n_pes``  -> linear central-counter barrier (one level),
-  * ``k == 2``      -> radix-2 logarithmic tree (log2(N) levels),
-  * anything in between is a k-ary tree.  When ``log_k(N)`` is not an
-    integer the *first* level uses a smaller group (the paper adapts the
-    first step in the same way).
+The primitive is :func:`mixed_radix_tree`: an arbitrary per-level
+composition of group sizes whose product covers the cluster.  Every
+named schedule is a point in that space:
+
+  * ``central_counter``      -> one level of size N,
+  * ``kary_tree(k)``         -> ``[first, k, k, ..., k]`` (the paper
+    adapts the *first* level when ``log_k(N)`` is not an integer),
+  * hierarchy-matched trees  -> e.g. ``(8, 16, 8)`` for TeraPool's
+    Tile/Group/Cluster structure — the tuned design points of Sec. 5
+    that beat the best uniform radix (see :mod:`repro.core.tuning`).
+
+Schedules compose (:func:`compose`): a tree over one Tile stacked under
+a tree over the Groups is again a mixed-radix tree, with spans and
+latencies re-derived for the combined hierarchy.
 
 Partial barriers synchronize a contiguous subset of the cluster (e.g. the
 256 PEs sharing one FFT) using the per-Group / per-Tile wakeup registers.
@@ -38,7 +46,11 @@ class Level:
 
 @dataclasses.dataclass(frozen=True)
 class BarrierSchedule:
-    """Static structure of one barrier instance."""
+    """Static structure of one barrier instance.
+
+    ``radix`` is the uniform radix for k-ary trees and ``0`` for a
+    genuinely mixed-radix composition (no single k describes it).
+    """
 
     n_pes: int                 # PEs synchronized by this barrier
     radix: int
@@ -49,16 +61,68 @@ class BarrierSchedule:
     def n_levels(self) -> int:
         return len(self.levels)
 
+    @property
+    def sizes(self) -> tuple:
+        """Per-level group sizes, leaf level first."""
+        return tuple(lvl.group_size for lvl in self.levels)
+
+    @property
+    def name(self) -> str:
+        """Canonical name: group sizes joined leaf-to-root, e.g.
+        ``"8x16x8"`` (plus a ``p`` suffix for partial barriers)."""
+        return schedule_name(self)
+
 
 def _check_pow2(x: int, name: str) -> None:
     if x < 2 or (x & (x - 1)) != 0:
         raise ValueError(f"{name} must be a power of two >= 2, got {x}")
 
 
+def mixed_radix_tree(sizes: Sequence[int], n_pes: int | None = None,
+                     cfg: TeraPoolConfig = DEFAULT, *,
+                     partial: bool = False) -> BarrierSchedule:
+    """Build the arrival tree with per-level group ``sizes`` (leaf level
+    first).  The whole schedule design space in one constructor: every
+    composition of ``log2(N)`` into power-of-two level sizes is a valid
+    tree, including all uniform radices and the hierarchy-matched
+    compositions (e.g. ``(8, 16, 8)`` = Tile/Group/Cluster).
+
+    Per-level spans are cumulative products of the sizes; each level's
+    counter latency follows from the locality class of its span
+    (``cfg.access_latency``), exactly as for uniform trees.
+    """
+    sizes = tuple(int(g) for g in sizes)
+    if not sizes:
+        raise ValueError("schedule needs at least one level")
+    for g in sizes:
+        _check_pow2(g, "level size")
+    n = math.prod(sizes)
+    if n_pes is not None and int(n_pes) != n:
+        raise ValueError(
+            f"level sizes {sizes} cover {n} PEs, expected {n_pes}")
+    if n > cfg.n_pes:
+        raise ValueError(f"schedule spans {n} PEs, cluster has {cfg.n_pes}")
+
+    levels: List[Level] = []
+    span = 1
+    for g in sizes:
+        span *= g
+        levels.append(Level(group_size=g, span=span,
+                            latency=cfg.access_latency(span)))
+
+    # A single uniform k describes the tree iff every level past the
+    # first is the same size k and the (possibly adapted) first level is
+    # no larger — the exact shape kary_tree produces.
+    tail = sizes[-1]
+    uniform = all(g == tail for g in sizes[1:]) and sizes[0] <= tail
+    return BarrierSchedule(n_pes=n, radix=tail if uniform else 0,
+                           levels=tuple(levels), partial=partial)
+
+
 def kary_tree(radix: int, n_pes: int | None = None,
               cfg: TeraPoolConfig = DEFAULT, *,
               partial: bool = False) -> BarrierSchedule:
-    """Build the k-ary arrival tree for ``n_pes`` cores.
+    """The uniform-radix arrival tree for ``n_pes`` cores.
 
     ``n_levels = ceil(log_k N)``; the first level synchronizes
     ``N / k**(n_levels-1)`` PEs so the remaining levels are exactly
@@ -75,23 +139,14 @@ def kary_tree(radix: int, n_pes: int | None = None,
     n_levels = math.ceil(math.log(n) / math.log(k))
     first = n // (k ** (n_levels - 1))
     sizes: List[int] = [first] + [k] * (n_levels - 1)
-    assert math.prod(sizes) == n
-
-    levels: List[Level] = []
-    span = 1
-    for g in sizes:
-        span *= g
-        levels.append(Level(group_size=g, span=span,
-                            latency=cfg.access_latency(span)))
-    return BarrierSchedule(n_pes=n, radix=k, levels=tuple(levels),
-                           partial=partial)
+    return mixed_radix_tree(sizes, n_pes=n, cfg=cfg, partial=partial)
 
 
 def central_counter(n_pes: int | None = None,
                     cfg: TeraPoolConfig = DEFAULT) -> BarrierSchedule:
     """Linear central-counter barrier: every PE hits one shared counter."""
     n = int(n_pes if n_pes is not None else cfg.n_pes)
-    return kary_tree(n, n_pes=n, cfg=cfg)
+    return mixed_radix_tree((n,), cfg=cfg)
 
 
 def partial_barrier(group_pes: int, radix: int,
@@ -108,6 +163,50 @@ def all_radices(n_pes: int | None = None,
     """All power-of-two radices 2..N (N == central counter)."""
     n = int(n_pes if n_pes is not None else cfg.n_pes)
     return [1 << i for i in range(1, int(math.log2(n)) + 1)]
+
+
+# ---------------------------------------------------------------------------
+# Schedule algebra.
+# ---------------------------------------------------------------------------
+
+def compose(*schedules: BarrierSchedule,
+            cfg: TeraPoolConfig = DEFAULT,
+            partial: bool = False) -> BarrierSchedule:
+    """Stack schedules leaf-to-root into one tree over the product of
+    their PE counts.
+
+    ``compose(tile, groups)`` synchronizes ``tile.n_pes`` PEs per leaf
+    subtree, then the survivors through ``groups``: the level sizes
+    concatenate, and spans/latencies are re-derived for the combined
+    hierarchy (an outer level's counters move up a locality class once
+    its span crosses a Tile or Group boundary).
+    """
+    if not schedules:
+        raise ValueError("compose needs at least one schedule")
+    sizes: List[int] = []
+    for s in schedules:
+        sizes.extend(lvl.group_size for lvl in s.levels)
+    return mixed_radix_tree(sizes, cfg=cfg, partial=partial)
+
+
+def schedule_name(schedule: BarrierSchedule) -> str:
+    """Canonical, sortable name: level sizes joined leaf-to-root
+    (``"8x16x8"``), with a ``p`` suffix for partial barriers."""
+    base = "x".join(str(g) for g in schedule.sizes)
+    return base + ("p" if schedule.partial else "")
+
+
+def describe(schedule: BarrierSchedule) -> str:
+    """One-line human description of a schedule's structure."""
+    kind = (f"central counter" if schedule.n_levels == 1
+            and schedule.levels[0].group_size == schedule.n_pes
+            else f"radix-{schedule.radix} tree" if schedule.radix
+            else "mixed-radix tree")
+    spans = ",".join(str(lvl.span) for lvl in schedule.levels)
+    lats = ",".join(str(lvl.latency) for lvl in schedule.levels)
+    part = " (partial)" if schedule.partial else ""
+    return (f"{schedule_name(schedule)}: {kind} over {schedule.n_pes} "
+            f"PEs{part}, spans [{spans}], latencies [{lats}]")
 
 
 # ---------------------------------------------------------------------------

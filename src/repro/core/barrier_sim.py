@@ -215,12 +215,6 @@ def simulate_reference(arrivals: jnp.ndarray, schedule: BarrierSchedule,
     )
 
 
-def simulate_batch(arrivals: jnp.ndarray, schedule: BarrierSchedule,
-                   cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
-    """Batch of :func:`simulate` over a leading Monte-Carlo axis."""
-    return simulate(arrivals, schedule, cfg)
-
-
 def uniform_arrivals(key: jax.Array, max_delay: float, n_pes: int,
                      n_trials: int = 16) -> jnp.ndarray:
     """The paper's synthetic benchmark (Sec. 4.1): per-PE delay drawn
@@ -236,7 +230,7 @@ def mean_span_cycles(key: jax.Array, schedule: BarrierSchedule,
                      n_trials: int = 16) -> jnp.ndarray:
     """Average Fig. 4a metric (last-in -> last-out cycles) over trials."""
     arr = uniform_arrivals(key, max_delay, schedule.n_pes, n_trials)
-    return jnp.mean(simulate_batch(arr, schedule, cfg).span_cycles)
+    return jnp.mean(simulate(arr, schedule, cfg).span_cycles)
 
 
 def overhead_fraction(key: jax.Array, schedule: BarrierSchedule,
@@ -246,6 +240,6 @@ def overhead_fraction(key: jax.Array, schedule: BarrierSchedule,
     """Fig. 4b metric: mean per-PE barrier residency over total runtime,
     as a function of the synchronization-free region (SFR)."""
     arr = uniform_arrivals(key, max_delay, schedule.n_pes, n_trials)
-    res = simulate_batch(arr, schedule, cfg)
+    res = simulate(arr, schedule, cfg)
     barrier = jnp.mean(res.mean_residency)
     return barrier / (sfr_cycles + barrier)

@@ -89,20 +89,35 @@ def shard_map_compat(f, mesh, in_specs, out_specs, manual: Sequence[str]):
                check_rep=False, auto=auto)
 
 
-def make_factored_mesh(radix: int, *, multi_pod: bool = False,
+def make_factored_mesh(radix, *, multi_pod: bool = False,
                        model: int = 16, data: int = 16):
-    """A production mesh whose ``data`` axis is factored into radix-k
-    sub-axes — the radix knob of the k-ary tree barrier.  Device order is
-    identical to :func:`repro.launch.mesh.make_production_mesh`, so the
-    physical placement is unchanged; only the collective decomposition
-    differs."""
-    if radix < 2 or radix & (radix - 1):
-        raise ValueError("radix must be a power of two >= 2")
-    n_sub = max(1, round(math.log(data, radix)))
-    if radix ** n_sub != data:
-        raise ValueError(f"radix {radix} does not factor data axis {data}")
-    sub = tuple(radix for _ in range(n_sub))
-    names = tuple(f"data{i}" for i in range(n_sub))
+    """A production mesh whose ``data`` axis is factored into sub-axes —
+    the radix knob of the tree barrier.  ``radix`` is either an int
+    (uniform radix-k factoring, one sub-axis per log_k stage) or a
+    sequence of per-stage factors (mixed radix, leaf stage first),
+    mirroring :func:`repro.core.barrier.mixed_radix_tree`: e.g.
+    ``(4, 2, 2)`` factors ``data=16`` into three reduction stages of
+    those sizes.  Device order is identical to
+    :func:`repro.launch.mesh.make_production_mesh`, so the physical
+    placement is unchanged; only the collective decomposition differs."""
+    if isinstance(radix, (tuple, list)):
+        sub = tuple(int(f) for f in radix)
+        for f in sub:
+            if f < 2 or f & (f - 1):
+                raise ValueError(
+                    f"factors must be powers of two >= 2, got {f}")
+        if math.prod(sub) != data:
+            raise ValueError(
+                f"factors {sub} do not cover data axis {data}")
+    else:
+        if radix < 2 or radix & (radix - 1):
+            raise ValueError("radix must be a power of two >= 2")
+        n_sub = max(1, round(math.log(data, radix)))
+        if radix ** n_sub != data:
+            raise ValueError(
+                f"radix {radix} does not factor data axis {data}")
+        sub = tuple(radix for _ in range(n_sub))
+    names = tuple(f"data{i}" for i in range(len(sub)))
     shape = ((2,) if multi_pod else ()) + sub + (model,)
     axes = (("pod",) if multi_pod else ()) + names + ("model",)
     try:
@@ -183,8 +198,8 @@ def gather_param(p: jnp.ndarray, axes: Sequence[str], dim: int = 0
 
 
 def sync_gradient(g: jnp.ndarray, cfg: SyncConfig, *,
-                  pod_axes: Sequence[str], data_axes: Sequence[str],
-                  scatter_dim: int = 0) -> jnp.ndarray:
+                  pod_axes: Sequence[str],
+                  data_axes: Sequence[str]) -> jnp.ndarray:
     """Synchronize one gradient tensor across the data-parallel axes.
 
     * flat: one all-reduce over every manual axis (central counter).

@@ -7,11 +7,16 @@ beamforming = MATMUL of the (N_B x N_RX) coefficient matrix with the
 FFT outputs, column-distributed over all 1024 PEs.
 
 Barrier options (the paper's comparison):
-  * ``central``      — global central-counter barrier after every stage;
-  * ``tree(k)``      — global k-ary tree barrier after every stage;
-  * ``partial(k)``   — k-ary tree over each 256-PE FFT subset only
-                       (the selective Group-wakeup registers), global
-                       barrier only at the FFT->MATMUL dependency.
+  * ``central``       — global central-counter barrier after every stage;
+  * ``tree(k)``       — global k-ary tree barrier after every stage;
+  * ``partial(k)``    — k-ary tree over each 256-PE FFT subset only
+                        (the selective Group-wakeup registers), global
+                        barrier only at the FFT->MATMUL dependency;
+  * ``tuned``         — global mixed-radix tree picked by the exhaustive
+                        tuner (:mod:`repro.core.tuning`) for this app's
+                        arrival scatter (hierarchy-pruned search);
+  * ``tuned_partial`` — tuned mixed-radix tree over each FFT subset,
+                        tuned global tree at the FFT->MATMUL dependency.
 
 Scheduling ``ffts_per_round`` independent FFTs between barriers
 amortizes synchronization (Fig. 3): more FFTs per round -> lower sync
@@ -21,6 +26,7 @@ fine-grained sync vs. 1.2x / 6.2% overhead on the 4x16-FFT benchmark).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from functools import partial
 from typing import NamedTuple
@@ -55,6 +61,17 @@ class FiveGConfig:
         return int(math.log(self.n_sc, 4))  # radix-4 DIF
 
     @property
+    def epoch_work(self) -> float:
+        """Per-PE cycles of one barrier-to-barrier epoch."""
+        return self.stage_cycles * self.ffts_per_round
+
+    @property
+    def epoch_jitter(self) -> float:
+        """Arrival scatter entering each stage barrier — the scatter
+        the tuned sync modes optimize their schedules for."""
+        return self.stage_jitter_frac * self.epoch_work
+
+    @property
     def concurrent_ffts(self) -> int:
         return 1024 // self.fft_pes  # 4 subsets
 
@@ -80,10 +97,31 @@ def _epoch_arrivals(key: jax.Array, start: jnp.ndarray, work: float,
                                              maxval=jitter)
 
 
+# Fixed seed for the tuner's Monte-Carlo arrival draws: tuning is part
+# of the *schedule construction*, deterministic per design point.
+_TUNING_SEED = 1023
+
+
+@functools.lru_cache(maxsize=None)
+def _tuned_schedule(n_pes: int, delay: float, partial_tree: bool,
+                    cfg: TeraPoolConfig) -> barrier.BarrierSchedule:
+    """Best mixed-radix composition for one arrival scatter.  Cached per
+    (n_pes, delay): the tuner sweep runs once per design point, through
+    the shared compiled scanned core.  Subset trees (<= 256 PEs) search
+    exhaustively — their composition count is small; the full-cluster
+    tree uses the hierarchy-aware pruned space (128 vs 512 candidates)."""
+    from . import tuning
+    prune = "none" if n_pes <= 256 else "hierarchy"
+    return tuning.best_schedule(
+        jax.random.PRNGKey(_TUNING_SEED), n_pes, delay=delay, n_trials=8,
+        cfg=cfg, prune=prune, partial=partial_tree)
+
+
 def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
                        cfg: TeraPoolConfig):
     """Stage + global schedules and the partial-group count for a mode."""
     n = cfg.n_pes
+    jitter = app.epoch_jitter
     if sync == "central":
         stage_sched = barrier.central_counter(cfg=cfg)
         partial_groups = 1
@@ -93,9 +131,18 @@ def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
     elif sync == "partial":
         stage_sched = barrier.partial_barrier(app.fft_pes, radix, cfg=cfg)
         partial_groups = n // app.fft_pes
+    elif sync == "tuned":
+        stage_sched = _tuned_schedule(n, jitter, False, cfg)
+        partial_groups = 1
+    elif sync == "tuned_partial":
+        stage_sched = _tuned_schedule(app.fft_pes, jitter, True, cfg)
+        partial_groups = n // app.fft_pes
     else:
         raise ValueError(f"unknown sync mode {sync!r}")
-    global_sched = barrier.kary_tree(min(radix, 32), cfg=cfg)
+    if sync in ("tuned", "tuned_partial"):
+        global_sched = _tuned_schedule(n, jitter, False, cfg)
+    else:
+        global_sched = barrier.kary_tree(min(radix, 32), cfg=cfg)
     return stage_sched, global_sched, partial_groups
 
 
@@ -150,10 +197,13 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                  sync: str = "partial", radix: int = 32,
                  cfg: TeraPoolConfig = DEFAULT) -> FiveGResult:
     """Simulate the full OFDM + beamforming pipeline under one barrier
-    strategy.  ``sync`` in {"central", "tree", "partial"}.
+    strategy.  ``sync`` in {"central", "tree", "partial", "tuned",
+    "tuned_partial"}; ``radix`` is ignored by the tuned modes (the
+    schedule comes from the mixed-radix tuner).
 
     The ~25-epoch pipeline runs as one jitted ``lax.scan``; changing the
-    radix (or any timing constant) does not retrace.
+    radix — or swapping in any tuned schedule of the same cluster — does
+    not retrace, because the schedule lives in traced level-table values.
     """
     n = cfg.n_pes
     stage_sched, global_sched, partial_groups = _resolve_schedules(
@@ -161,8 +211,8 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     stage_table = barrier.level_table(stage_sched, cfg=cfg)
     global_table = barrier.level_table(global_sched, cfg=cfg)
 
-    epoch_work = app.stage_cycles * app.ffts_per_round
-    jitter = app.stage_jitter_frac * epoch_work
+    epoch_work = app.epoch_work
+    jitter = app.epoch_jitter
     n_epochs = app.rounds * app.n_stages
     outs_per_pe = app.n_beams * app.n_sc / n
     mm_work = outs_per_pe * app.n_rx * app.mac_cycles
@@ -196,8 +246,8 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     stage_sched, global_sched, partial_groups = _resolve_schedules(
         app, sync, radix, cfg)
 
-    epoch_work = app.stage_cycles * app.ffts_per_round
-    jitter = app.stage_jitter_frac * epoch_work
+    epoch_work = app.epoch_work
+    jitter = app.epoch_jitter
     n_epochs = app.rounds * app.n_stages
 
     t = jnp.zeros((n,), jnp.float32)       # per-PE current time
@@ -245,13 +295,19 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
 
 def compare_barriers(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                      radix: int = 32,
-                     cfg: TeraPoolConfig = DEFAULT) -> dict:
-    """Fig. 7 comparison; returns per-strategy results + speedups over
-    the central-counter baseline."""
+                     cfg: TeraPoolConfig = DEFAULT,
+                     modes: tuple = ("central", "tree", "partial")) -> dict:
+    """Fig. 7 comparison; returns per-strategy results + per-mode
+    speedups over the central-counter baseline.  Pass ``modes``
+    including ``"tuned"`` / ``"tuned_partial"`` to compare the
+    mixed-radix tuner's schedules against the fixed-radix strategies."""
+    if "central" not in modes:
+        raise ValueError("modes must include the 'central' baseline")
     out = {}
-    for mode in ("central", "tree", "partial"):
+    for mode in modes:
         out[mode] = simulate_app(key, app, sync=mode, radix=radix, cfg=cfg)
     base = out["central"].total_cycles
-    out["speedup_tree"] = base / out["tree"].total_cycles
-    out["speedup_partial"] = base / out["partial"].total_cycles
+    for mode in modes:
+        if mode != "central":
+            out[f"speedup_{mode}"] = base / out[mode].total_cycles
     return out

@@ -1,21 +1,26 @@
-"""One-compile design-space sweeps over barrier radices and arrival
+"""One-compile design-space sweeps over barrier schedules and arrival
 scatters.
 
-The paper's whole result set (Figs. 4-7) is a sweep: barrier radix x
-arrival scatter x Monte-Carlo trial.  Because every power-of-two radix
-over one cluster shares a padded :class:`~repro.core.barrier.LevelTable`
-shape, the full grid runs through ONE jitted, ``vmap``-ed program —
-sweeping the radix knob costs one compile, not one per design point.
+The paper's whole result set (Figs. 4-7) is a sweep: barrier schedule x
+arrival scatter x Monte-Carlo trial.  Because every schedule over one
+cluster shares a padded :class:`~repro.core.barrier.LevelTable` shape,
+the full grid runs through ONE jitted, ``vmap``-ed program — sweeping
+the schedule knob costs one compile, not one per design point.
 
-Two entry points:
+Entry points:
 
-* :func:`sweep_barrier` — the Fig. 4 grid: stacked radix tables x
-  uniform-scatter delays x trials, all inside a single jit.  The
-  per-delay arrivals are the seed's ``uniform_arrivals`` bit-for-bit
-  (``uniform(0, d) == d * uniform(0, 1)`` under one key), so results
-  match the per-point seed path exactly.
-* :func:`simulate_radices` — fixed arrivals (e.g. one kernel's epoch,
-  Fig. 6) swept across a radix stack in one call.
+* :func:`sweep_schedules` — ANY stack of same-``n_pes`` schedules
+  (uniform radices, mixed-radix compositions from
+  :mod:`repro.core.tuning`, hand-built trees) x uniform-scatter delays
+  x trials, all inside a single jit.  The per-delay arrivals are the
+  seed's ``uniform_arrivals`` bit-for-bit (``uniform(0, d) ==
+  d * uniform(0, 1)`` under one key), so results match the per-point
+  seed path exactly.
+* :func:`sweep_barrier` — the Fig. 4 grid: :func:`sweep_schedules`
+  specialized to the uniform-radix stack.
+* :func:`simulate_schedules` / :func:`simulate_radices` — fixed
+  arrivals (e.g. one kernel's epoch, Fig. 6) swept across a schedule
+  stack in one call.
 """
 from __future__ import annotations
 
@@ -32,27 +37,39 @@ from .topology import DEFAULT, TeraPoolConfig
 
 
 class SweepResult(NamedTuple):
-    """Per-point timings over a (radix, delay, trial) grid.
+    """Per-point timings over a (schedule, delay, trial) grid.
 
-    Every field is ``(n_radices, n_delays, n_trials)``; ``radices`` and
-    ``delays`` echo the grid axes for self-describing results.
+    Every field is ``(n_schedules, n_delays, n_trials)``; ``schedules``
+    (static metadata) and ``delays`` echo the grid axes for
+    self-describing results.  ``radices`` is the per-schedule uniform
+    radix (0 for mixed-radix compositions).
     """
 
-    radices: jnp.ndarray          # (R,) int32
+    schedules: tuple              # tuple[BarrierSchedule], length S
     delays: jnp.ndarray           # (D,) float32
-    exit_time: jnp.ndarray        # (R, D, T)
-    last_arrival: jnp.ndarray     # (R, D, T)
-    span_cycles: jnp.ndarray      # (R, D, T)
-    mean_residency: jnp.ndarray   # (R, D, T)
+    exit_time: jnp.ndarray        # (S, D, T)
+    last_arrival: jnp.ndarray     # (S, D, T)
+    span_cycles: jnp.ndarray      # (S, D, T)
+    mean_residency: jnp.ndarray   # (S, D, T)
+
+    @property
+    def radices(self) -> jnp.ndarray:
+        """(S,) uniform radix per schedule (0 where mixed-radix)."""
+        return jnp.asarray([s.radix for s in self.schedules], jnp.int32)
+
+    @property
+    def names(self) -> tuple:
+        """Canonical schedule names, e.g. ``("2x8x8x8", "8x16x8")``."""
+        return tuple(barrier.schedule_name(s) for s in self.schedules)
 
     @property
     def mean_span(self) -> jnp.ndarray:
-        """(R, D) Fig. 4a metric, averaged over trials."""
+        """(S, D) Fig. 4a metric, averaged over trials."""
         return jnp.mean(self.span_cycles, axis=-1)
 
     @property
     def mean_residency_grid(self) -> jnp.ndarray:
-        """(R, D) mean per-PE barrier residency, averaged over trials."""
+        """(S, D) mean per-PE barrier residency, averaged over trials."""
         return jnp.mean(self.mean_residency, axis=-1)
 
 
@@ -80,26 +97,55 @@ def _sweep_grid(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
     return per_radix(tables, arrivals)
 
 
+def sweep_schedules(key: jax.Array,
+                    schedules: Sequence[barrier.BarrierSchedule],
+                    delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
+                    n_trials: int = 16,
+                    cfg: TeraPoolConfig = DEFAULT) -> SweepResult:
+    """Run ANY same-``n_pes`` schedule stack x delay x trial grid in one
+    compiled call — uniform radices and mixed-radix compositions alike
+    flow through the same jitted program."""
+    schedules = tuple(schedules)
+    tables = barrier.stack_tables(schedules, cfg)
+    n = schedules[0].n_pes
+    unit = jax.random.uniform(key, (n_trials, n), jnp.float32, 0.0, 1.0)
+    d = jnp.asarray(delays, jnp.float32)
+    res = _sweep_grid(tables, d, unit, cfg)
+    return SweepResult(schedules=schedules, delays=d, **res._asdict())
+
+
 def sweep_barrier(key: jax.Array, radices: Sequence[int] | None = None,
                   delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
                   n_pes: int | None = None, n_trials: int = 16,
                   cfg: TeraPoolConfig = DEFAULT) -> SweepResult:
-    """Run the full radix x delay x trial grid in one compiled call."""
+    """The Fig. 4 grid: :func:`sweep_schedules` over the uniform-radix
+    stack."""
     n = int(n_pes if n_pes is not None else cfg.n_pes)
     if radices is None:
         radices = barrier.all_radices(n, cfg)
-    tables = radix_tables(radices, n, cfg)
-    unit = jax.random.uniform(key, (n_trials, n), jnp.float32, 0.0, 1.0)
-    d = jnp.asarray(delays, jnp.float32)
-    res = _sweep_grid(tables, d, unit, cfg)
-    return SweepResult(radices=jnp.asarray(list(radices), jnp.int32),
-                       delays=d, **res._asdict())
+    scheds = [barrier.kary_tree(r, n_pes=n, cfg=cfg) for r in radices]
+    return sweep_schedules(key, scheds, delays, n_trials, cfg)
 
 
 @partial(jax.jit, static_argnums=(2,))
-def _radix_stack(tables: LevelTable, arrivals: jnp.ndarray,
-                 cfg: TeraPoolConfig) -> BarrierResult:
+def _schedule_stack(tables: LevelTable, arrivals: jnp.ndarray,
+                    cfg: TeraPoolConfig) -> BarrierResult:
     return jax.vmap(lambda tab: _scan_core(arrivals, tab, cfg))(tables)
+
+
+def simulate_schedules(arrivals: jnp.ndarray,
+                       schedules: Sequence[barrier.BarrierSchedule],
+                       cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
+    """Simulate ONE arrival vector under every schedule in the stack,
+    vmapped through one compile."""
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    schedules = tuple(schedules)
+    if schedules and arrivals.shape[-1] != schedules[0].n_pes:
+        raise ValueError(
+            f"arrivals has {arrivals.shape[-1]} PEs, schedules expect "
+            f"{schedules[0].n_pes}")
+    tables = barrier.stack_tables(schedules, cfg)
+    return _schedule_stack(tables, arrivals, cfg)
 
 
 def simulate_radices(arrivals: jnp.ndarray, radices: Sequence[int],
@@ -107,8 +153,9 @@ def simulate_radices(arrivals: jnp.ndarray, radices: Sequence[int],
     """Simulate ONE arrival vector under every radix in ``radices``
     (Fig. 6's per-kernel radix scan), vmapped through one compile."""
     arrivals = jnp.asarray(arrivals, jnp.float32)
-    tables = radix_tables(radices, arrivals.shape[-1], cfg)
-    return _radix_stack(tables, arrivals, cfg)
+    scheds = [barrier.kary_tree(r, n_pes=arrivals.shape[-1], cfg=cfg)
+              for r in radices]
+    return simulate_schedules(arrivals, scheds, cfg)
 
 
 def best_radix_per_delay(res: SweepResult) -> jnp.ndarray:

@@ -1,0 +1,188 @@
+"""Exhaustive, one-compile tuning over the mixed-radix schedule space.
+
+The paper's headline 1.6x comes from *fine-tuning* the synchronization
+tree to the machine hierarchy (Sec. 5): the best schedule for TeraPool
+is often NOT a uniform radix but a composition matched to the 8/16/8
+Tile/Group/Cluster structure.  This module opens that full design
+space:
+
+* :func:`enumerate_compositions` — every way to split ``log2(N)`` tree
+  depth into power-of-two level sizes: ``2**(log2(N)-1)`` schedules
+  (512 at N=1024), a strict superset of every uniform radix.
+* :func:`hierarchy_compositions` — the hierarchy-aware pruned search:
+  only compositions whose level spans land on Tile/Group/cluster
+  boundaries, where counters never straddle a locality class
+  (128 schedules at N=1024).
+* :func:`tune_barrier` — the exhaustive tuner: every composition x
+  delay x trial through the single compiled scanned core of
+  :mod:`repro.core.sweep` — one compile for the whole design space.
+* :func:`best_per_delay` / :func:`pareto_schedules` — selection: the
+  argmin schedule at each delay, and the schedules not dominated at
+  every delay simultaneously.
+
+Because the uniform radices are a subset of the enumeration, the tuned
+best can only match or beat the best uniform radix — the acceptance
+bar of tests/test_tuning.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import barrier, sweep
+from .barrier import BarrierSchedule
+from .topology import DEFAULT, TeraPoolConfig
+
+
+def enumerate_compositions(n_pes: int | None = None,
+                           cfg: TeraPoolConfig = DEFAULT
+                           ) -> List[Tuple[int, ...]]:
+    """All compositions of ``log2(N)`` into power-of-two level sizes,
+    leaf level first, in lexicographic order of the exponent parts.
+
+    ``2**(log2(N) - 1)`` compositions; every :func:`~repro.core.barrier.
+    kary_tree` shape (first level adapted, uniform tail) appears among
+    them, as does the central counter ``(N,)``.
+    """
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    barrier._check_pow2(n, "n_pes")
+    m = int(math.log2(n))
+
+    def parts(remaining: int):
+        if remaining == 0:
+            yield ()
+            return
+        for p in range(1, remaining + 1):
+            for rest in parts(remaining - p):
+                yield (1 << p,) + rest
+
+    return list(parts(m))
+
+
+def hierarchy_compositions(n_pes: int | None = None,
+                           cfg: TeraPoolConfig = DEFAULT
+                           ) -> List[Tuple[int, ...]]:
+    """The hierarchy-aware pruned search space: compositions whose
+    cumulative spans include every Tile/Group boundary inside ``N``, so
+    no level's counters straddle a locality class.  The product of the
+    per-segment compositions — 4 x 8 x 4 = 128 schedules for the full
+    8/16/8 cluster versus 512 exhaustive."""
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    barrier._check_pow2(n, "n_pes")
+    # Segment factors up the hierarchy, clipped to n.
+    t = min(n, cfg.pes_per_tile)
+    g = min(n // t, cfg.tiles_per_group)
+    c = n // (t * g)
+    out: List[Tuple[int, ...]] = []
+    segs = [s for s in (t, g, c) if s > 1]
+    if not segs:
+        return [(n,)] if n > 1 else []
+
+    def seg_parts(size: int):
+        return enumerate_compositions(size, cfg) if size > 1 else [()]
+
+    def product(i: int):
+        if i == len(segs):
+            yield ()
+            return
+        for head in seg_parts(segs[i]):
+            for rest in product(i + 1):
+                yield head + rest
+
+    for comp in product(0):
+        out.append(comp)
+    return out
+
+
+def all_schedules(n_pes: int | None = None,
+                  cfg: TeraPoolConfig = DEFAULT, *,
+                  prune: str = "none",
+                  partial: bool = False) -> List[BarrierSchedule]:
+    """Materialize the search space as schedules.  ``prune`` in
+    {"none", "hierarchy"} selects exhaustive vs hierarchy-aligned."""
+    if prune == "none":
+        comps = enumerate_compositions(n_pes, cfg)
+    elif prune == "hierarchy":
+        comps = hierarchy_compositions(n_pes, cfg)
+    else:
+        raise ValueError(f"unknown prune mode {prune!r}")
+    return [barrier.mixed_radix_tree(c, cfg=cfg, partial=partial)
+            for c in comps]
+
+
+def tune_barrier(key, n_pes: int | None = None,
+                 delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
+                 n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT, *,
+                 prune: str = "none",
+                 schedules: Sequence[BarrierSchedule] | None = None
+                 ) -> sweep.SweepResult:
+    """Sweep the full mixed-radix design space in ONE compiled call.
+
+    Every composition shares the padded level-table shape, so the whole
+    composition x delay x trial grid reuses the single compiled scanned
+    core (the same program the uniform-radix Fig. 4 sweep compiles).
+    Pass ``schedules`` to tune over an explicit candidate list instead
+    of the enumeration.
+    """
+    if schedules is None:
+        schedules = all_schedules(n_pes, cfg, prune=prune)
+    return sweep.sweep_schedules(key, schedules, delays, n_trials, cfg)
+
+
+class TunedPoint(NamedTuple):
+    """The winning schedule at one arrival scatter."""
+
+    delay: float
+    schedule: BarrierSchedule
+    mean_span: float              # its Fig. 4a metric
+    uniform_schedule: BarrierSchedule   # best uniform radix at this delay
+    uniform_span: float
+
+
+def best_per_delay(res: sweep.SweepResult) -> List[TunedPoint]:
+    """The argmin-span schedule at each delay, paired with the best
+    UNIFORM radix at that delay (the paper's Fig. 4a baseline)."""
+    spans = jnp.mean(res.span_cycles, axis=-1)          # (S, D)
+    uniform = [i for i, s in enumerate(res.schedules) if s.radix]
+    if not uniform:
+        raise ValueError("schedule stack contains no uniform radix")
+    out = []
+    for j, delay in enumerate(res.delays.tolist()):
+        col = spans[:, j]
+        i = int(jnp.argmin(col))
+        iu = uniform[int(jnp.argmin(col[jnp.asarray(uniform)]))]
+        out.append(TunedPoint(
+            delay=float(delay), schedule=res.schedules[i],
+            mean_span=float(col[i]),
+            uniform_schedule=res.schedules[iu],
+            uniform_span=float(col[iu])))
+    return out
+
+
+def pareto_schedules(res: sweep.SweepResult) -> List[BarrierSchedule]:
+    """Schedules on the Pareto front across delays: no other schedule
+    is at least as fast at every delay and strictly faster at one."""
+    sp = np.asarray(jnp.mean(res.span_cycles, axis=-1))  # (S, D)
+    keep = []
+    for i in range(sp.shape[0]):
+        dominated = np.any(np.all(sp <= sp[i], axis=1)
+                           & np.any(sp < sp[i], axis=1))
+        if not dominated:
+            keep.append(res.schedules[i])
+    return keep
+
+
+def best_schedule(key, n_pes: int | None = None, delay: float = 0.0,
+                  n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT, *,
+                  prune: str = "none", partial: bool = False
+                  ) -> BarrierSchedule:
+    """Convenience: the single tuned schedule for one arrival scatter
+    (used by the 5G ``sync="tuned"`` modes)."""
+    schedules = all_schedules(n_pes, cfg, prune=prune, partial=partial)
+    res = tune_barrier(key, n_pes, delays=(delay,), n_trials=n_trials,
+                       cfg=cfg, schedules=schedules)
+    i = int(jnp.argmin(jnp.mean(res.span_cycles, axis=-1)[:, 0]))
+    return schedules[i]

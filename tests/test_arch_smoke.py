@@ -56,10 +56,17 @@ def test_smoke_decode_matches_full_forward(arch):
     if cfg.family == "encoder":
         pytest.skip("encoder-only: no decode")
     if cfg.is_moe:
-        # Capacity dropping legitimately differs between batched prefill
-        # (tokens compete for expert slots) and single-token decode; use
-        # a no-drop capacity for the numerical-equivalence check.
-        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        # Two discrete routing decisions legitimately differ between
+        # batched prefill and single-token decode and would turn tiny
+        # bf16 accumulation-order differences (e.g. MLA's absorbed
+        # decode path reorders the attention matmuls) into full expert
+        # swaps: capacity dropping (tokens compete for slots) and the
+        # top-k selection itself (near-tied router probs flip).
+        # Neutralize both for the numerical-equivalence check: no-drop
+        # capacity, and every expert selected (gates still weight by
+        # router probability, so the check stays end-to-end).
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0,
+                                  top_k=cfg.n_experts)
     params = init_params(cfg, KEY)
     B, S = 2, 32
     tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)

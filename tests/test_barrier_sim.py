@@ -126,7 +126,7 @@ def test_c3_sfr_for_10pct_overhead():
         for radix in (16, 32, 64, 1024):
             s = barrier.kary_tree(radix)
             arr = barrier_sim.uniform_arrivals(KEY, delay, 1024, 8)
-            res = barrier_sim.simulate_batch(arr, s)
+            res = barrier_sim.simulate(arr, s)
             cost = float(jnp.mean(res.mean_residency))
             best = cost if best is None else min(best, cost)
         sfr_needed = best * 9.0          # overhead <10% -> SFR >= 9x cost

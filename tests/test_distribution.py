@@ -138,3 +138,14 @@ def test_factored_mesh_radix():
     assert m.shape["data0"] == 2 and m.shape["data1"] == 2
     with pytest.raises(ValueError):
         collectives.make_factored_mesh(3, model=2, data=4)
+
+
+def test_factored_mesh_mixed_factors():
+    """Mixed per-stage factors mirror barrier.mixed_radix_tree."""
+    m = collectives.make_factored_mesh((4, 2), model=1, data=8)
+    assert m.axis_names == ("data0", "data1", "model")
+    assert m.shape["data0"] == 4 and m.shape["data1"] == 2
+    with pytest.raises(ValueError):
+        collectives.make_factored_mesh((4, 4), model=1, data=8)  # product
+    with pytest.raises(ValueError):
+        collectives.make_factored_mesh((4, 3), model=1, data=12)  # pow2
