@@ -1,0 +1,79 @@
+"""Counter placement as a tuned design axis (beyond-figure): the
+hierarchy-pruned composition space crossed with every named placement
+strategy runs composition x placement x delay x trial through ONE
+compiled scanned core, and the per-strategy best-span curves quantify
+the contention-vs-latency trade-off the paper's Sec. 5 locality
+argument implies — leaf-local is conflict-free at minimal latency,
+group-hub/central pay same-bank serialization, tile-interleaved pays
+cluster-class hops.  A second block reports the 5G application under
+``sync="placed"`` (jointly tuned schedule + counter->bank mapping)
+next to the schedule-only tuner.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import fiveg, placement, tuning
+
+from . import timing
+
+KEY = jax.random.PRNGKey(0)
+DELAYS = [0.0, 128.0, 512.0, 2048.0]
+N_TRIALS = 4   # composition x placement (128 x 4 at N=1024) dominates
+
+
+def placement_tradeoff():
+    res, steady_us, compile_us = timing.measure(
+        lambda: tuning.tune_barrier(KEY, delays=DELAYS, n_trials=N_TRIALS,
+                                    prune="hierarchy",
+                                    placements=placement.STRATEGIES),
+        warmup=0, iters=1)
+    n_points = len(res.schedules)
+    rows = [("placement_sweep_grid", steady_us,
+             f"{n_points}x{len(DELAYS)}x{N_TRIALS}", compile_us)]
+    spans = jnp.mean(res.span_cycles, axis=-1)          # (S, D)
+    by_strategy = {
+        strat: [i for i, p in enumerate(res.placements)
+                if p.strategy == strat]
+        for strat in placement.STRATEGIES}
+    for j, delay in enumerate(res.delays.tolist()):
+        d = int(delay)
+        base = None
+        for strat in placement.STRATEGIES:
+            idx = jnp.asarray(by_strategy[strat])
+            col = spans[idx, j]
+            k = int(jnp.argmin(col))
+            i = by_strategy[strat][k]
+            best = float(col[k])
+            if strat == "leaf_local":
+                base = best
+            shared = sum(res.placements[i].shared_bank_counters())
+            rows.append((f"placement_delay{d}_{strat}", 0.0,
+                         round(best, 1), 0.0))
+            rows.append((f"placement_delay{d}_{strat}_sched", 0.0,
+                         res.schedules[i].name, 0.0))
+            rows.append((f"placement_delay{d}_{strat}_shared", 0.0,
+                         shared, 0.0))
+            if strat != "leaf_local":
+                rows.append((f"placement_delay{d}_{strat}_penalty", 0.0,
+                             round(best / base, 3), 0.0))
+    return rows
+
+
+def placed_5g():
+    app = fiveg.FiveGConfig(n_rx=16, ffts_per_round=1)
+    res, steady_us, compile_us = timing.measure(
+        lambda: fiveg.compare_barriers(
+            KEY, app, radix=32, modes=("central", "partial", "tuned",
+                                       "placed")),
+        warmup=0, iters=1)
+    rows = [("placement_5g_compare", steady_us, "4modes", compile_us)]
+    for mode in ("partial", "tuned", "placed"):
+        rows.append((f"placement_5g_speedup_{mode}", 0.0,
+                     round(float(res[f"speedup_{mode}"]), 3), 0.0))
+        rows.append((f"placement_5g_syncfrac_{mode}", 0.0,
+                     round(float(res[mode].sync_fraction), 4), 0.0))
+    return rows
+
+
+def run():
+    return placement_tradeoff() + placed_5g()

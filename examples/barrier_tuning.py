@@ -11,13 +11,17 @@ Two layers of the tuner API:
 2. `sweep.simulate_schedules` replays one measured kernel epoch
    (workload arrival model) under the whole schedule stack — the
    per-kernel tuning of Fig. 6, with mixed-radix trees in the race.
+3. `tuning.tune_barrier(placements=...)` crosses the composition space
+   with the counter-placement strategies of `repro.core.placement`:
+   WHERE each counter lives (which L1 bank) becomes a tuned knob, and
+   co-located counters pay real same-bank serialization.
 
     PYTHONPATH=src python examples/barrier_tuning.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import sweep, tuning, workloads
+from repro.core import placement, sweep, tuning, workloads
 
 KEY = jax.random.PRNGKey(0)
 DELAYS = (0.0, 128.0, 512.0, 2048.0)
@@ -59,13 +63,40 @@ def tune_kernels():
                   f"{float(t[central] / t[i]):9.2f}x")
 
 
+def tune_placement():
+    """Counter placement as the second design axis: the contention /
+    latency trade-off behind the paper's leaf-local policy."""
+    res = tuning.tune_barrier(KEY, delays=DELAYS, n_trials=4,
+                              prune="hierarchy",
+                              placements=placement.STRATEGIES)
+    spans = jnp.mean(res.span_cycles, axis=-1)
+    print(f"\nswept {len(res.schedules)} (composition, placement) points "
+          f"x {len(DELAYS)} delays in one compile")
+    print(f"{'delay':>6s} " + " ".join(f"{s:>18s}"
+                                       for s in placement.STRATEGIES))
+    for j, d in enumerate(res.delays.tolist()):
+        cells = []
+        for strat in placement.STRATEGIES:
+            idx = [i for i, p in enumerate(res.placements)
+                   if p.strategy == strat]
+            best = float(jnp.min(spans[jnp.asarray(idx), j]))
+            cells.append(f"{best:18.1f}")
+        print(f"{d:6.0f} " + " ".join(cells))
+    print("(mean span, best composition per strategy: co-locating "
+          "counters on hub/central banks pays same-bank serialization; "
+          "interleaving pays cluster-class hops)")
+
+
 def main():
     tune_random_delay()
     tune_kernels()
+    tune_placement()
     print("\nThe uniform-radix spread reproduces Fig. 6c (1.1-1.7x from "
           "radix selection); the tuned compositions squeeze the "
           "remaining few percent the paper attributes to hierarchy-"
-          "matched trees.")
+          "matched trees, and the placement sweep shows the paper's "
+          "leaf-local counter allocation is the dominant corner of the "
+          "contention-vs-latency trade-off.")
 
 
 if __name__ == "__main__":

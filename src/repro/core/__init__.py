@@ -4,7 +4,8 @@ Two coupled layers (DESIGN.md §2):
 
 * **Faithful reproduction** — a cycle-level simulator of TeraPool barrier
   synchronization (:mod:`topology`, :mod:`barrier`, :mod:`barrier_sim`),
-  one-compile design-space sweeps and the exhaustive mixed-radix tuner
+  bank-aware counter placement (:mod:`placement`), one-compile
+  design-space sweeps and the exhaustive mixed-radix x placement tuner
   (:mod:`sweep`, :mod:`tuning`), the kernel arrival-time models
   (:mod:`workloads`) and the full 5G OFDM + beamforming application
   (:mod:`fiveg`).
@@ -12,39 +13,46 @@ Two coupled layers (DESIGN.md §2):
   and partial synchronization for pod-scale training/serving
   (:mod:`collectives`).
 """
-from . import (barrier, barrier_sim, collectives, fiveg, sweep, topology,
-               tuning, workloads)
+from . import (barrier, barrier_sim, collectives, fiveg, placement, sweep,
+               topology, tuning, workloads)
 from .barrier import (BarrierSchedule, LevelTable, all_radices,
-                      central_counter, compose, describe, kary_tree,
-                      level_table, mixed_radix_tree, partial_barrier,
-                      schedule_name, stack_tables)
+                      central_counter, compose, counter_width, describe,
+                      kary_tree, level_table, mixed_radix_tree,
+                      partial_barrier, schedule_name, stack_tables)
 from .barrier_sim import (BarrierResult, mean_span_cycles, overhead_fraction,
                           simulate, simulate_reference, simulate_table,
                           uniform_arrivals)
 from .collectives import (FLAT, HIERARCHICAL, SyncConfig, gather_param,
                           make_factored_mesh, partial_psum, shard_slice,
                           sync_gradient, tree_psum)
+from .placement import (STRATEGIES, CounterPlacement, all_placements,
+                        derive_latencies, explicit_placement, place_counters,
+                        simulate_placed_reference)
 from .sweep import (SweepResult, best_radix_per_delay, radix_tables,
                     simulate_radices, simulate_schedules, sweep_barrier,
                     sweep_schedules)
 from .topology import DEFAULT, TeraPoolConfig
 from .tuning import (TunedPoint, all_schedules, best_per_delay,
-                     best_schedule, enumerate_compositions,
-                     hierarchy_compositions, pareto_schedules, tune_barrier)
+                     best_placed_schedule, best_schedule,
+                     enumerate_compositions, hierarchy_compositions,
+                     pareto_schedules, tune_barrier)
 
 __all__ = [
-    "BarrierResult", "BarrierSchedule", "DEFAULT", "FLAT", "HIERARCHICAL",
-    "LevelTable", "SweepResult", "SyncConfig", "TeraPoolConfig",
-    "TunedPoint", "all_radices", "all_schedules", "barrier", "barrier_sim",
-    "best_per_delay", "best_radix_per_delay", "best_schedule",
-    "central_counter", "collectives", "compose", "describe",
-    "enumerate_compositions", "fiveg", "gather_param",
-    "hierarchy_compositions", "kary_tree", "level_table",
+    "BarrierResult", "BarrierSchedule", "CounterPlacement", "DEFAULT",
+    "FLAT", "HIERARCHICAL", "LevelTable", "STRATEGIES", "SweepResult",
+    "SyncConfig", "TeraPoolConfig", "TunedPoint", "all_placements",
+    "all_radices", "all_schedules", "barrier", "barrier_sim",
+    "best_per_delay", "best_placed_schedule", "best_radix_per_delay",
+    "best_schedule", "central_counter", "collectives", "compose",
+    "counter_width", "derive_latencies", "describe",
+    "enumerate_compositions", "explicit_placement", "fiveg",
+    "gather_param", "hierarchy_compositions", "kary_tree", "level_table",
     "make_factored_mesh", "mean_span_cycles", "mixed_radix_tree",
     "overhead_fraction", "pareto_schedules", "partial_barrier",
-    "partial_psum", "radix_tables", "schedule_name", "shard_slice",
-    "simulate", "simulate_radices", "simulate_schedules",
-    "simulate_reference", "simulate_table", "stack_tables", "sweep",
-    "sweep_barrier", "sweep_schedules", "sync_gradient", "topology",
-    "tree_psum", "tune_barrier", "tuning", "uniform_arrivals", "workloads",
+    "partial_psum", "place_counters", "placement", "radix_tables",
+    "schedule_name", "shard_slice", "simulate", "simulate_placed_reference",
+    "simulate_radices", "simulate_schedules", "simulate_reference",
+    "simulate_table", "stack_tables", "sweep", "sweep_barrier",
+    "sweep_schedules", "sync_gradient", "topology", "tree_psum",
+    "tune_barrier", "tuning", "uniform_arrivals", "workloads",
 ]

@@ -214,7 +214,8 @@ def describe(schedule: BarrierSchedule) -> str:
 # ---------------------------------------------------------------------------
 
 class LevelTable(NamedTuple):
-    """Dense ``(max_levels,)`` encoding of a :class:`BarrierSchedule`.
+    """Dense, fixed-shape encoding of a :class:`BarrierSchedule` (and
+    optionally of WHERE its counters live).
 
     Every tree over ``n_pes`` cores fits in ``log2(n_pes)`` levels (the
     radix-2 depth), so padding each table to that depth gives every
@@ -224,18 +225,34 @@ class LevelTable(NamedTuple):
     counter), zero latency and zero software overhead — so they pass
     timings through unchanged.
 
+    ``latencies`` and ``bank_ids`` are per-COUNTER columns of width
+    ``G = counter_width(n_pes)`` (the most counters any level can
+    have): counter ``j`` of a level reads column ``j``.  Without an
+    explicit :class:`~repro.core.placement.CounterPlacement` the
+    columns encode the paper's leaf-local policy — the span-heuristic
+    latency broadcast per level, and one distinct bank per counter —
+    so the default tables reproduce the pre-placement model
+    bit-for-bit.  Sibling counters mapped to the SAME bank id contend:
+    the scanned core serializes atomics per bank, not per counter.
+
     Being a NamedTuple of arrays, a table is a JAX pytree: it can be
     ``vmap``-ed over a stacked leading axis (see :func:`stack_tables`)
     and fed straight through ``lax.scan``.
     """
 
     group_sizes: jnp.ndarray    # (L,) int32, 1 past the real depth
-    latencies: jnp.ndarray      # (L,) float32, 0 past the real depth
+    latencies: jnp.ndarray      # (L, G) float32 per counter, 0 past depth
     instr_cycles: jnp.ndarray   # (L,) float32, 0 past the real depth
+    bank_ids: jnp.ndarray       # (L, G) int32 counter -> bank, distinct
+                                # identity banks past the real depth
 
     @property
     def max_levels(self) -> int:
         return self.group_sizes.shape[-1]
+
+    @property
+    def max_counters(self) -> int:
+        return self.bank_ids.shape[-1]
 
 
 def max_depth(n_pes: int) -> int:
@@ -243,47 +260,101 @@ def max_depth(n_pes: int) -> int:
     return max(1, int(math.log2(n_pes)))
 
 
+def counter_width(n_pes: int) -> int:
+    """Most counters any level of a tree over ``n_pes`` cores can have:
+    the leaf level of the radix-2 tree, ``n_pes // 2``."""
+    return max(1, n_pes // 2)
+
+
 @functools.lru_cache(maxsize=None)
 def _level_table_cached(schedule: BarrierSchedule, max_levels: int,
-                        cfg: TeraPoolConfig) -> LevelTable:
+                        cfg: TeraPoolConfig, placement) -> LevelTable:
+    n = schedule.n_pes
+    width = counter_width(n)
     sizes = [lvl.group_size for lvl in schedule.levels]
-    lats = [float(lvl.latency) for lvl in schedule.levels]
     instr = [float(cfg.instr_per_level)] * len(sizes)
     pad = max_levels - len(sizes)
     if pad < 0:
         raise ValueError(
             f"schedule has {len(sizes)} levels, max_levels={max_levels}")
+
+    # Identity padding for unused counter columns and padding levels:
+    # zero latency, and bank ids that are distinct from every real bank
+    # (and from each other) so phantom counters can never contend.
+    sentinel = cfg.n_pes * cfg.banking_factor
+    lat_rows: list = []
+    bank_rows: list = []
+    if placement is None:
+        # Span-heuristic fallback (paper leaf-local): one latency per
+        # level broadcast across its counters, one distinct bank each.
+        for lvl in schedule.levels:
+            lat_rows.append([float(lvl.latency)] * width)
+            bank_rows.append([j * lvl.span * cfg.banking_factor
+                              for j in range(width)])
+    else:
+        if placement.n_levels != len(sizes):
+            raise ValueError(
+                f"placement maps {placement.n_levels} levels, schedule "
+                f"has {len(sizes)}")
+        for lvl, lrow, brow in zip(schedule.levels, placement.latencies,
+                                   placement.banks):
+            count = n // lvl.span
+            if len(brow) != count:
+                raise ValueError(
+                    f"level with span {lvl.span} has {count} counters, "
+                    f"placement maps {len(brow)}")
+            lat_rows.append(list(map(float, lrow))
+                            + [0.0] * (width - count))
+            bank_rows.append(list(brow)
+                             + [sentinel + j for j in range(count, width)])
+    for _ in range(pad):
+        lat_rows.append([0.0] * width)
+        bank_rows.append(list(range(width)))
+
     return LevelTable(
         group_sizes=jnp.asarray(sizes + [1] * pad, jnp.int32),
-        latencies=jnp.asarray(lats + [0.0] * pad, jnp.float32),
+        latencies=jnp.asarray(lat_rows, jnp.float32),
         instr_cycles=jnp.asarray(instr + [0.0] * pad, jnp.float32),
+        bank_ids=jnp.asarray(bank_rows, jnp.int32),
     )
 
 
 def level_table(schedule: BarrierSchedule, max_levels: int | None = None,
-                cfg: TeraPoolConfig = DEFAULT) -> LevelTable:
+                cfg: TeraPoolConfig = DEFAULT, *,
+                placement=None) -> LevelTable:
     """Encode ``schedule`` as a padded :class:`LevelTable`.
 
     ``max_levels`` defaults to ``log2(schedule.n_pes)`` so that *all*
     power-of-two radices over the same cluster share one table shape —
-    and hence one compiled simulator.
+    and hence one compiled simulator.  ``placement`` (a
+    :class:`~repro.core.placement.CounterPlacement`) supplies explicit
+    per-counter banks and latencies; ``None`` falls back to the legacy
+    span heuristic with conflict-free banks.
     """
     if max_levels is None:
         max_levels = max_depth(schedule.n_pes)
-    return _level_table_cached(schedule, int(max_levels), cfg)
+    return _level_table_cached(schedule, int(max_levels), cfg, placement)
 
 
 def stack_tables(schedules: Sequence[BarrierSchedule],
-                 cfg: TeraPoolConfig = DEFAULT) -> LevelTable:
+                 cfg: TeraPoolConfig = DEFAULT,
+                 placements: Sequence | None = None) -> LevelTable:
     """Stack the tables of same-``n_pes`` schedules along a new leading
     axis, ready to ``vmap`` one compiled simulate over the whole radix
-    sweep."""
+    (or radix x placement) sweep.  ``placements`` aligns with
+    ``schedules``; ``None`` entries use the span-heuristic fallback."""
     if not schedules:
         raise ValueError("no schedules to stack")
     n = schedules[0].n_pes
     if any(s.n_pes != n for s in schedules):
         raise ValueError("stacked schedules must share n_pes")
+    if placements is None:
+        placements = [None] * len(schedules)
+    if len(placements) != len(schedules):
+        raise ValueError(
+            f"{len(schedules)} schedules but {len(placements)} placements")
     depth = max(max_depth(n),
                 max(s.n_levels for s in schedules))
-    tables = [level_table(s, depth, cfg) for s in schedules]
+    tables = [level_table(s, depth, cfg, placement=p)
+              for s, p in zip(schedules, placements)]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *tables)

@@ -5,8 +5,10 @@ barrier), computes the exact timing of the arrival tree under the
 machine model of :mod:`repro.core.topology`:
 
 * every PE issues an atomic fetch&add to its group's counter;
-* concurrent atomics to one counter serialize at 1/cycle (single-ported
-  bank) — modelled exactly with a max-plus prefix scan;
+* concurrent atomics to one BANK serialize at 1/cycle (single-ported
+  bank) — modelled exactly with a max-plus prefix scan over each
+  bank's request queue, so sibling counters co-located on one bank
+  (see :mod:`repro.core.placement`) contend with each other;
 * the group's last arriver observes ``group_size - 1``, resets the
   counter and proceeds to the next level (re-initialization is folded
   into arrival);
@@ -81,28 +83,47 @@ def _serialize_group(ready: jnp.ndarray, latency: int,
 # Scanned core over a padded level table (the one-compile path).
 # ---------------------------------------------------------------------------
 
+def _segmented_cummax(x: jnp.ndarray, is_start: jnp.ndarray) -> jnp.ndarray:
+    """Running max along the last axis that restarts wherever
+    ``is_start`` is True (the classic segmented-scan combine, exact for
+    max)."""
+    def combine(left, right):
+        lv, lf = left
+        rv, rf = right
+        return jnp.where(rf, rv, jnp.maximum(lv, rv)), lf | rf
+    v, _ = jax.lax.associative_scan(combine, (x, is_start))
+    return v
+
+
 def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
                cfg: TeraPoolConfig) -> BarrierResult:
     """One barrier episode as a ``lax.scan`` over the padded level table.
 
     The carried state keeps a fixed shape across levels: ``ready`` is
     always ``(n_pes,)``, with the ``m`` current survivors compacted into
-    the prefix ``ready[:m]`` and the tail masked to ``+inf``.  Each
-    level serializes the per-group atomics with the same max-plus
-    reduction as :func:`_serialize_group`, but expressed through
-    ``lexsort`` + ``segment_max`` so the group size can be a *traced*
-    value: group membership is ``index // g`` and the within-group
-    arrival rank is the index mod ``g`` after a (group, time) lexsort —
-    every group holds exactly ``g`` contiguous slots, so the sort packs
-    each group's arrivals, in order, into its own slot range.
+    the prefix ``ready[:m]`` and the tail masked to ``+inf``.
 
-    Identity padding levels (g=1, latency=0, instr=0) map each survivor
-    to its own counter with no cost, so timings pass through unchanged
-    and all radices of one cluster share this single compiled program.
+    Atomics serialize per BANK, not per counter: each survivor's
+    counter (``index // g``) maps to a bank through the table's
+    ``bank_ids`` column, requests are lexsorted by (bank, ready), and
+    every bank's queue is one segment of the max-plus service-start
+    scan — so sibling counters placed on one bank contend in a single
+    shared queue, while conflict-free placements (one bank per
+    counter, the default tables) reduce to the seed per-counter
+    serialization bit-for-bit.  A counter's last arriver proceeds once
+    its own request is serviced, plus that counter's placement-derived
+    access latency (``latencies`` column).
+
+    All shapes are fixed and every quantity (group size, banks,
+    latencies) is traced data, so any schedule x placement combination
+    over one cluster shares this single compiled program.  Identity
+    padding levels (g=1, latency=0, instr=0, distinct banks) pass
+    timings through unchanged.
     """
     n = arrivals.shape[-1]
     arrivals = jnp.asarray(arrivals, jnp.float32)
     idx = jnp.arange(n)
+    width = table.bank_ids.shape[-1]
     svc = jnp.float32(cfg.bank_service_cycles)
 
     # Level 0 entry: call, address computation, atomic issue.
@@ -110,13 +131,29 @@ def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
 
     def step(carry, level):
         ready, m = carry
-        g, lat, instr = level
-        seg = idx // g
-        order = jnp.lexsort((ready, seg))
+        g, lat_col, instr, bank_col = level
+        grp = idx // g
+        # Masked tail slots can index past the counter columns; clip —
+        # their +inf ready times sort to the back of any bank queue
+        # they land in, so they never perturb live requests.
+        bank = bank_col[jnp.minimum(grp, width - 1)]
+        order = jnp.lexsort((ready, bank))
         a = ready[order]
-        rank = (idx % g).astype(jnp.float32)
-        last = jax.ops.segment_max(a - rank * svc, seg, num_segments=n)
-        done = last + (g - 1).astype(jnp.float32) * svc + lat
+        b = bank[order]
+        gs = grp[order]
+        # Per-bank queues: rank = position within the bank segment;
+        # service start of request j is rank*svc + max over earlier
+        # same-bank requests of (a - rank*svc) — the same max-plus
+        # reduction as _serialize_group, segmented by bank.
+        is_start = jnp.concatenate(
+            [jnp.ones((1,), bool), b[1:] != b[:-1]])
+        seg_first = jax.lax.cummax(jnp.where(is_start, idx, 0))
+        rank = (idx - seg_first).astype(jnp.float32)
+        start = _segmented_cummax(a - rank * svc, is_start) + rank * svc
+        # The counter's last arriver is its latest-serviced request; the
+        # fetched value travels back at the counter's access latency.
+        last = jax.ops.segment_max(start, gs, num_segments=n)
+        done = last + lat_col[jnp.minimum(idx, width - 1)]
         # Survivors run the compare/branch + counter-reset + next-level
         # setup before issuing the next atomic; compact them to the
         # prefix and re-mask the tail.
@@ -125,7 +162,8 @@ def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
         return (ready, m), None
 
     TRACE_COUNTS["scan_core"] += 1
-    levels = (table.group_sizes, table.latencies, table.instr_cycles)
+    levels = (table.group_sizes, table.latencies, table.instr_cycles,
+              table.bank_ids)
     (ready, _), _ = jax.lax.scan(step, (ready0, jnp.int32(n)), levels)
 
     exit_time = ready[0] + cfg.wakeup_cycles
@@ -134,7 +172,7 @@ def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
         exit_time=exit_time,
         last_arrival=last_arrival,
         span_cycles=exit_time - last_arrival,
-        mean_residency=jnp.mean(exit_time - arrivals, axis=-1),
+        mean_residency=jnp.mean(exit_time[..., None] - arrivals, axis=-1),
     )
 
 
@@ -160,13 +198,17 @@ def simulate_table(arrivals: jnp.ndarray, table: LevelTable,
 
 
 def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
-             cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
+             cfg: TeraPoolConfig = DEFAULT, *,
+             placement=None) -> BarrierResult:
     """Simulate one barrier episode (or a leading batch of them).
 
     Args:
       arrivals: (..., n_pes) per-PE barrier-entry cycles (float or int).
       schedule: static tree structure from :mod:`repro.core.barrier`.
       cfg: machine model.
+      placement: optional :class:`~repro.core.placement.CounterPlacement`
+        mapping every counter to a concrete bank; ``None`` uses the
+        legacy span-heuristic latencies with conflict-free banks.
 
     Returns:
       :class:`BarrierResult` with the leading batch shape of ``arrivals``.
@@ -176,7 +218,8 @@ def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
         raise ValueError(
             f"arrivals has {arrivals.shape[-1]} PEs, schedule expects "
             f"{schedule.n_pes}")
-    return simulate_table(arrivals, level_table(schedule, cfg=cfg), cfg)
+    table = level_table(schedule, cfg=cfg, placement=placement)
+    return simulate_table(arrivals, table, cfg)
 
 
 def simulate_reference(arrivals: jnp.ndarray, schedule: BarrierSchedule,

@@ -16,7 +16,12 @@ Barrier options (the paper's comparison):
                         tuner (:mod:`repro.core.tuning`) for this app's
                         arrival scatter (hierarchy-pruned search);
   * ``tuned_partial`` — tuned mixed-radix tree over each FFT subset,
-                        tuned global tree at the FFT->MATMUL dependency.
+                        tuned global tree at the FFT->MATMUL dependency;
+  * ``placed``        — jointly tuned (schedule, counter placement)
+                        pair: the tuner also chooses WHICH BANKS hold
+                        the counters (:mod:`repro.core.placement`), so
+                        bank contention and access locality are tuned
+                        together with the tree shape.
 
 Scheduling ``ffts_per_round`` independent FFTs between barriers
 amortizes synchronization (Fig. 3): more FFTs per round -> lower sync
@@ -117,11 +122,26 @@ def _tuned_schedule(n_pes: int, delay: float, partial_tree: bool,
         cfg=cfg, prune=prune, partial=partial_tree)
 
 
+@functools.lru_cache(maxsize=None)
+def _placed_schedule(n_pes: int, delay: float, cfg: TeraPoolConfig):
+    """Jointly tuned (schedule, placement) pair for one arrival scatter:
+    the hierarchy-pruned composition space crossed with every named
+    counter-placement strategy, one compiled sweep (cached per design
+    point like :func:`_tuned_schedule`)."""
+    from . import tuning
+    prune = "none" if n_pes <= 256 else "hierarchy"
+    return tuning.best_placed_schedule(
+        jax.random.PRNGKey(_TUNING_SEED), n_pes, delay=delay, n_trials=8,
+        cfg=cfg, prune=prune)
+
+
 def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
                        cfg: TeraPoolConfig):
-    """Stage + global schedules and the partial-group count for a mode."""
+    """Stage + global schedules, their counter placements (None =
+    span-heuristic fallback) and the partial-group count for a mode."""
     n = cfg.n_pes
     jitter = app.epoch_jitter
+    stage_plc = global_plc = None
     if sync == "central":
         stage_sched = barrier.central_counter(cfg=cfg)
         partial_groups = 1
@@ -137,13 +157,18 @@ def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
     elif sync == "tuned_partial":
         stage_sched = _tuned_schedule(app.fft_pes, jitter, True, cfg)
         partial_groups = n // app.fft_pes
+    elif sync == "placed":
+        stage_sched, stage_plc = _placed_schedule(n, jitter, cfg)
+        partial_groups = 1
     else:
         raise ValueError(f"unknown sync mode {sync!r}")
     if sync in ("tuned", "tuned_partial"):
         global_sched = _tuned_schedule(n, jitter, False, cfg)
+    elif sync == "placed":
+        global_sched, global_plc = stage_sched, stage_plc
     else:
         global_sched = barrier.kary_tree(min(radix, 32), cfg=cfg)
-    return stage_sched, global_sched, partial_groups
+    return stage_sched, global_sched, partial_groups, stage_plc, global_plc
 
 
 @partial(jax.jit,
@@ -198,18 +223,22 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                  cfg: TeraPoolConfig = DEFAULT) -> FiveGResult:
     """Simulate the full OFDM + beamforming pipeline under one barrier
     strategy.  ``sync`` in {"central", "tree", "partial", "tuned",
-    "tuned_partial"}; ``radix`` is ignored by the tuned modes (the
-    schedule comes from the mixed-radix tuner).
+    "tuned_partial", "placed"}; ``radix`` is ignored by the tuned and
+    placed modes (the schedule — and for ``placed`` the counter->bank
+    mapping too — comes from the mixed-radix tuner).
 
     The ~25-epoch pipeline runs as one jitted ``lax.scan``; changing the
-    radix — or swapping in any tuned schedule of the same cluster — does
-    not retrace, because the schedule lives in traced level-table values.
+    radix — or swapping in any tuned schedule or placement of the same
+    cluster — does not retrace, because schedule and placement live in
+    traced level-table values.
     """
     n = cfg.n_pes
-    stage_sched, global_sched, partial_groups = _resolve_schedules(
-        app, sync, radix, cfg)
-    stage_table = barrier.level_table(stage_sched, cfg=cfg)
-    global_table = barrier.level_table(global_sched, cfg=cfg)
+    (stage_sched, global_sched, partial_groups, stage_plc,
+     global_plc) = _resolve_schedules(app, sync, radix, cfg)
+    stage_table = barrier.level_table(stage_sched, cfg=cfg,
+                                      placement=stage_plc)
+    global_table = barrier.level_table(global_sched, cfg=cfg,
+                                       placement=global_plc)
 
     epoch_work = app.epoch_work
     jitter = app.epoch_jitter
@@ -240,11 +269,18 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                            sync: str = "partial", radix: int = 32,
                            cfg: TeraPoolConfig = DEFAULT) -> FiveGResult:
     """The seed unrolled epoch loop over the per-level reference
-    simulator — the equivalence oracle for :func:`simulate_app`.
-    Retraces every epoch; use only in tests."""
+    simulator — the equivalence oracle for :func:`simulate_app`.  The
+    ``placed`` mode routes through the placement-aware per-bank-queue
+    oracle instead.  Retraces every epoch; use only in tests."""
+    from . import placement as placement_mod
     n = cfg.n_pes
-    stage_sched, global_sched, partial_groups = _resolve_schedules(
-        app, sync, radix, cfg)
+    (stage_sched, global_sched, partial_groups, stage_plc,
+     global_plc) = _resolve_schedules(app, sync, radix, cfg)
+
+    def ref(arr, sched, plc):
+        if plc is None:
+            return barrier_sim.simulate_reference(arr, sched, cfg)
+        return placement_mod.simulate_placed_reference(arr, sched, plc, cfg)
 
     epoch_work = app.epoch_work
     jitter = app.epoch_jitter
@@ -258,16 +294,16 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         arr = _epoch_arrivals(keys[e], t, epoch_work, jitter, n)
         if partial_groups > 1:
             grp = arr.reshape(partial_groups, app.fft_pes)
-            res = barrier_sim.simulate_reference(grp, stage_sched, cfg)
+            res = ref(grp, stage_sched, stage_plc)
             t = jnp.repeat(res.exit_time, app.fft_pes)
             sync_acc = sync_acc + jnp.mean(res.mean_residency)
         else:
-            res = barrier_sim.simulate_reference(arr, stage_sched, cfg)
+            res = ref(arr, stage_sched, stage_plc)
             t = jnp.full((n,), res.exit_time)
             sync_acc = sync_acc + res.mean_residency
 
     # FFT -> beamforming data dependency: one global barrier.
-    res = barrier_sim.simulate_reference(t, global_sched, cfg)
+    res = ref(t, global_sched, global_plc)
     t = jnp.full((n,), res.exit_time)
     sync_acc = sync_acc + res.mean_residency
 
@@ -275,7 +311,7 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     outs_per_pe = app.n_beams * app.n_sc / n
     mm_work = outs_per_pe * app.n_rx * app.mac_cycles
     arr = _epoch_arrivals(keys[-2], t, mm_work, 0.05 * mm_work, n)
-    res = barrier_sim.simulate_reference(arr, global_sched, cfg)
+    res = ref(arr, global_sched, global_plc)
     total = res.exit_time
     sync_acc = sync_acc + res.mean_residency
 
@@ -299,8 +335,9 @@ def compare_barriers(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                      modes: tuple = ("central", "tree", "partial")) -> dict:
     """Fig. 7 comparison; returns per-strategy results + per-mode
     speedups over the central-counter baseline.  Pass ``modes``
-    including ``"tuned"`` / ``"tuned_partial"`` to compare the
-    mixed-radix tuner's schedules against the fixed-radix strategies."""
+    including ``"tuned"`` / ``"tuned_partial"`` / ``"placed"`` to
+    compare the mixed-radix tuner's schedules (and the jointly tuned
+    counter placement) against the fixed-radix strategies."""
     if "central" not in modes:
         raise ValueError("modes must include the 'central' baseline")
     out = {}

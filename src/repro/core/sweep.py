@@ -37,12 +37,17 @@ from .topology import DEFAULT, TeraPoolConfig
 
 
 class SweepResult(NamedTuple):
-    """Per-point timings over a (schedule, delay, trial) grid.
+    """Per-point timings over a (schedule[, placement], delay, trial)
+    grid.
 
-    Every field is ``(n_schedules, n_delays, n_trials)``; ``schedules``
-    (static metadata) and ``delays`` echo the grid axes for
-    self-describing results.  ``radices`` is the per-schedule uniform
-    radix (0 for mixed-radix compositions).
+    Every array field is ``(n_schedules, n_delays, n_trials)``;
+    ``schedules`` (static metadata) and ``delays`` echo the grid axes
+    for self-describing results.  ``radices`` is the per-schedule
+    uniform radix (0 for mixed-radix compositions).  ``placements``
+    aligns with ``schedules`` — one
+    :class:`~repro.core.placement.CounterPlacement` (or ``None`` for
+    the span-heuristic fallback) per stacked design point; empty on
+    placement-free sweeps.
     """
 
     schedules: tuple              # tuple[BarrierSchedule], length S
@@ -51,6 +56,7 @@ class SweepResult(NamedTuple):
     last_arrival: jnp.ndarray     # (S, D, T)
     span_cycles: jnp.ndarray      # (S, D, T)
     mean_residency: jnp.ndarray   # (S, D, T)
+    placements: tuple = ()        # tuple[CounterPlacement | None], length S
 
     @property
     def radices(self) -> jnp.ndarray:
@@ -59,8 +65,12 @@ class SweepResult(NamedTuple):
 
     @property
     def names(self) -> tuple:
-        """Canonical schedule names, e.g. ``("2x8x8x8", "8x16x8")``."""
-        return tuple(barrier.schedule_name(s) for s in self.schedules)
+        """Canonical schedule names, e.g. ``("2x8x8x8", "8x16x8")``,
+        suffixed ``@strategy`` where an explicit placement is attached."""
+        placs = self.placements or (None,) * len(self.schedules)
+        return tuple(
+            barrier.schedule_name(s) + (f"@{p.strategy}" if p else "")
+            for s, p in zip(self.schedules, placs))
 
     @property
     def mean_span(self) -> jnp.ndarray:
@@ -101,17 +111,27 @@ def sweep_schedules(key: jax.Array,
                     schedules: Sequence[barrier.BarrierSchedule],
                     delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
                     n_trials: int = 16,
-                    cfg: TeraPoolConfig = DEFAULT) -> SweepResult:
+                    cfg: TeraPoolConfig = DEFAULT,
+                    placements: Sequence | None = None) -> SweepResult:
     """Run ANY same-``n_pes`` schedule stack x delay x trial grid in one
-    compiled call — uniform radices and mixed-radix compositions alike
-    flow through the same jitted program."""
+    compiled call — uniform radices, mixed-radix compositions and
+    counter placements alike flow through the same jitted program.
+
+    ``placements`` aligns with ``schedules`` (``None`` entries fall
+    back to the span heuristic); placed and unplaced points share one
+    table shape, so adding the placement axis costs zero extra
+    compiles."""
     schedules = tuple(schedules)
-    tables = barrier.stack_tables(schedules, cfg)
+    tables = barrier.stack_tables(schedules, cfg, placements)
     n = schedules[0].n_pes
     unit = jax.random.uniform(key, (n_trials, n), jnp.float32, 0.0, 1.0)
     d = jnp.asarray(delays, jnp.float32)
     res = _sweep_grid(tables, d, unit, cfg)
-    return SweepResult(schedules=schedules, delays=d, **res._asdict())
+    # Placement-free sweeps keep the documented empty tuple (consumers
+    # treat () and all-None alike via ``res.placements or ...``).
+    placements = tuple(placements) if placements is not None else ()
+    return SweepResult(schedules=schedules, delays=d,
+                       placements=placements, **res._asdict())
 
 
 def sweep_barrier(key: jax.Array, radices: Sequence[int] | None = None,
@@ -135,16 +155,17 @@ def _schedule_stack(tables: LevelTable, arrivals: jnp.ndarray,
 
 def simulate_schedules(arrivals: jnp.ndarray,
                        schedules: Sequence[barrier.BarrierSchedule],
-                       cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
-    """Simulate ONE arrival vector under every schedule in the stack,
-    vmapped through one compile."""
+                       cfg: TeraPoolConfig = DEFAULT,
+                       placements: Sequence | None = None) -> BarrierResult:
+    """Simulate ONE arrival vector under every schedule (x optional
+    per-entry placement) in the stack, vmapped through one compile."""
     arrivals = jnp.asarray(arrivals, jnp.float32)
     schedules = tuple(schedules)
     if schedules and arrivals.shape[-1] != schedules[0].n_pes:
         raise ValueError(
             f"arrivals has {arrivals.shape[-1]} PEs, schedules expect "
             f"{schedules[0].n_pes}")
-    tables = barrier.stack_tables(schedules, cfg)
+    tables = barrier.stack_tables(schedules, cfg, placements)
     return _schedule_stack(tables, arrivals, cfg)
 
 

@@ -56,19 +56,61 @@ class TeraPoolConfig:
         return self.n_pes * self.banking_factor
 
     @property
+    def banks_per_tile(self) -> int:
+        return self.pes_per_tile * self.banking_factor   # 32
+
+    @property
+    def banks_per_group(self) -> int:
+        return self.pes_per_group * self.banking_factor  # 512
+
+    @property
     def wakeup_cycles(self) -> int:
         """Full notification cost: register write -> trigger -> resume."""
         return self.wakeup_write + self.wakeup_trigger + self.wfi_resume
 
     def access_latency(self, span: int) -> int:
-        """Latency for a PE to reach a synchronization variable that is
+        """Legacy span heuristic: latency for a PE to reach a counter
         placed local to a *contiguous* block of ``span`` PEs (the paper
-        places leaf counters on contiguous PE indices, Sec. 5)."""
+        places leaf counters on contiguous PE indices, Sec. 5).
+
+        .. deprecated::
+            Counter latency is now derived from an explicit counter ->
+            bank mapping (:mod:`repro.core.placement`), which models
+            *where* a counter lives instead of assuming it sits inside
+            its span.  This method is retained as the documented
+            fallback used when no :class:`~repro.core.placement.
+            CounterPlacement` is given; the paper-style ``leaf_local``
+            strategy reproduces it bit-for-bit
+            (tests/test_placement.py).
+        """
         if span <= self.pes_per_tile:
             return self.lat_tile
         if span <= self.pes_per_group:
             return self.lat_group
         return self.lat_cluster
+
+    def span_bank_latency(self, pe_lo: int, span: int, bank: int) -> int:
+        """Worst-accessor latency for the contiguous PE block
+        ``[pe_lo, pe_lo + span)`` to reach ``bank``.
+
+        The locality class is decided by the *farthest* accessing PE —
+        consistent with the span heuristic, which charges a whole level
+        the class of its span.  A bank inside the accessors' common
+        Tile costs ``lat_tile``; inside their common Group,
+        ``lat_group``; anything else is a cluster-class access.
+        """
+        pe_hi = pe_lo + span - 1
+        if (pe_lo // self.pes_per_tile == pe_hi // self.pes_per_tile
+                == bank // self.banks_per_tile):
+            return self.lat_tile
+        if (pe_lo // self.pes_per_group == pe_hi // self.pes_per_group
+                == bank // self.banks_per_group):
+            return self.lat_group
+        return self.lat_cluster
+
+    def pe_bank_latency(self, pe: int, bank: int) -> int:
+        """Latency for one PE to reach one bank (locality-class model)."""
+        return self.span_bank_latency(pe, 1, bank)
 
 
 DEFAULT = TeraPoolConfig()

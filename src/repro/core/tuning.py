@@ -14,15 +14,22 @@ space:
   boundaries, where counters never straddle a locality class
   (128 schedules at N=1024).
 * :func:`tune_barrier` — the exhaustive tuner: every composition x
-  delay x trial through the single compiled scanned core of
-  :mod:`repro.core.sweep` — one compile for the whole design space.
+  placement x delay x trial through the single compiled scanned core
+  of :mod:`repro.core.sweep` — one compile for the whole design space.
+  The ``placements`` axis crosses each composition with the named
+  counter-placement strategies of :mod:`repro.core.placement`, making
+  WHERE counters live a tuned knob next to the tree shape.
 * :func:`best_per_delay` / :func:`pareto_schedules` — selection: the
-  argmin schedule at each delay, and the schedules not dominated at
-  every delay simultaneously.
+  argmin (schedule, placement) at each delay, and the schedules not
+  dominated at every delay simultaneously.
+* :func:`best_placed_schedule` — the jointly tuned (schedule,
+  placement) pair for one arrival scatter (the 5G ``sync="placed"``
+  mode consumes this).
 
-Because the uniform radices are a subset of the enumeration, the tuned
-best can only match or beat the best uniform radix — the acceptance
-bar of tests/test_tuning.py.
+Because the uniform radices (and the paper's leaf-local placement) are
+a subset of the enumeration, the tuned best can only match or beat the
+best uniform radix — the acceptance bar of tests/test_tuning.py and
+tests/test_placement.py.
 """
 from __future__ import annotations
 
@@ -32,8 +39,9 @@ from typing import List, NamedTuple, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from . import barrier, sweep
+from . import barrier, placement as placement_mod, sweep
 from .barrier import BarrierSchedule
+from .placement import CounterPlacement
 from .topology import DEFAULT, TeraPoolConfig
 
 
@@ -117,7 +125,8 @@ def tune_barrier(key, n_pes: int | None = None,
                  delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
                  n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT, *,
                  prune: str = "none",
-                 schedules: Sequence[BarrierSchedule] | None = None
+                 schedules: Sequence[BarrierSchedule] | None = None,
+                 placements: Sequence[str] | None = None
                  ) -> sweep.SweepResult:
     """Sweep the full mixed-radix design space in ONE compiled call.
 
@@ -126,29 +135,61 @@ def tune_barrier(key, n_pes: int | None = None,
     core (the same program the uniform-radix Fig. 4 sweep compiles).
     Pass ``schedules`` to tune over an explicit candidate list instead
     of the enumeration.
+
+    ``placements`` — a sequence of strategy names from
+    :data:`repro.core.placement.STRATEGIES` — adds the counter
+    placement axis: the stack becomes the cross product composition x
+    strategy (the result's ``schedules``/``placements`` tuples align
+    entry-for-entry), still through the single compiled core.  ``None``
+    keeps the placement-free legacy sweep.
     """
     if schedules is None:
         schedules = all_schedules(n_pes, cfg, prune=prune)
-    return sweep.sweep_schedules(key, schedules, delays, n_trials, cfg)
+    if placements is None:
+        return sweep.sweep_schedules(key, schedules, delays, n_trials, cfg)
+    for strat in placements:
+        if not isinstance(strat, str):
+            raise TypeError(
+                "placements must be strategy names; pass explicit "
+                "CounterPlacements through sweep.sweep_schedules")
+    scheds: List[BarrierSchedule] = []
+    placs: List[CounterPlacement] = []
+    for strat in placements:
+        for s in schedules:
+            scheds.append(s)
+            placs.append(placement_mod.place_counters(s, strat, cfg))
+    return sweep.sweep_schedules(key, scheds, delays, n_trials, cfg,
+                                 placements=placs)
 
 
 class TunedPoint(NamedTuple):
-    """The winning schedule at one arrival scatter."""
+    """The winning schedule (+ placement) at one arrival scatter."""
 
     delay: float
     schedule: BarrierSchedule
     mean_span: float              # its Fig. 4a metric
     uniform_schedule: BarrierSchedule   # best uniform radix at this delay
     uniform_span: float
+    placement: object = None      # CounterPlacement | None of the winner
+
+
+def _is_baseline(plc) -> bool:
+    """Placements equivalent to the paper's model (span-heuristic
+    fallback or explicit leaf-local) qualify as the uniform baseline."""
+    return plc is None or plc.strategy == "leaf_local"
 
 
 def best_per_delay(res: sweep.SweepResult) -> List[TunedPoint]:
-    """The argmin-span schedule at each delay, paired with the best
-    UNIFORM radix at that delay (the paper's Fig. 4a baseline)."""
+    """The argmin-span (schedule, placement) at each delay, paired with
+    the best UNIFORM radix under the paper's leaf-local placement at
+    that delay (the Fig. 4a baseline)."""
     spans = jnp.mean(res.span_cycles, axis=-1)          # (S, D)
-    uniform = [i for i, s in enumerate(res.schedules) if s.radix]
+    placs = res.placements or (None,) * len(res.schedules)
+    uniform = [i for i, s in enumerate(res.schedules)
+               if s.radix and _is_baseline(placs[i])]
     if not uniform:
-        raise ValueError("schedule stack contains no uniform radix")
+        raise ValueError(
+            "schedule stack contains no baseline-placed uniform radix")
     out = []
     for j, delay in enumerate(res.delays.tolist()):
         col = spans[:, j]
@@ -158,7 +199,8 @@ def best_per_delay(res: sweep.SweepResult) -> List[TunedPoint]:
             delay=float(delay), schedule=res.schedules[i],
             mean_span=float(col[i]),
             uniform_schedule=res.schedules[iu],
-            uniform_span=float(col[iu])))
+            uniform_span=float(col[iu]),
+            placement=placs[i]))
     return out
 
 
@@ -186,3 +228,21 @@ def best_schedule(key, n_pes: int | None = None, delay: float = 0.0,
                        cfg=cfg, schedules=schedules)
     i = int(jnp.argmin(jnp.mean(res.span_cycles, axis=-1)[:, 0]))
     return schedules[i]
+
+
+def best_placed_schedule(key, n_pes: int | None = None, delay: float = 0.0,
+                         n_trials: int = 16,
+                         cfg: TeraPoolConfig = DEFAULT, *,
+                         prune: str = "none", partial: bool = False,
+                         placements: Sequence[str] = placement_mod.STRATEGIES
+                         ) -> Tuple[BarrierSchedule, CounterPlacement]:
+    """The jointly tuned (schedule, placement) pair for one arrival
+    scatter: composition x strategy through one compiled sweep (used by
+    the 5G ``sync="placed"`` mode).  Because leaf-local is in the
+    strategy set, the placed winner can only match or beat the
+    placement-free tuned schedule on the tuning draws."""
+    schedules = all_schedules(n_pes, cfg, prune=prune, partial=partial)
+    res = tune_barrier(key, n_pes, delays=(delay,), n_trials=n_trials,
+                       cfg=cfg, schedules=schedules, placements=placements)
+    i = int(jnp.argmin(jnp.mean(res.span_cycles, axis=-1)[:, 0]))
+    return res.schedules[i], res.placements[i]

@@ -1,0 +1,249 @@
+"""Bank-aware counter placement: strategy structure, the leaf-local
+backward-compat oracle (placement-derived latencies == legacy span
+heuristic, bit-for-bit), per-bank contention semantics validated
+against an independent bank-queue oracle, the one-compile property of
+composition x placement x delay sweeps, and the placed 5G sync mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (barrier, barrier_sim, fiveg, placement, sweep,
+                        tuning)
+from repro.core.topology import DEFAULT
+
+KEY = jax.random.PRNGKey(0)
+DELAYS = (0.0, 128.0, 512.0, 2048.0)
+
+
+# ---------------------------------------------------------------------------
+# Placement structure.
+# ---------------------------------------------------------------------------
+
+def test_strategy_structure():
+    s = barrier.mixed_radix_tree((8, 16, 8))
+    for strat in placement.STRATEGIES:
+        pl = placement.place_counters(s, strat)
+        assert pl.strategy == strat
+        assert [len(row) for row in pl.banks] == [128, 8, 1]
+        assert [len(row) for row in pl.latencies] == [128, 8, 1]
+        for brow in pl.banks:
+            assert all(0 <= b < DEFAULT.n_banks for b in brow)
+    with pytest.raises(ValueError):
+        placement.place_counters(s, "nope")
+
+
+def test_contention_exposure_by_strategy():
+    s = barrier.mixed_radix_tree((8, 16, 8))
+    # leaf_local and tile_interleaved are conflict-free; group_hub piles
+    # the 16 Tile counters of each Group on one hub bank; central piles
+    # everything on bank 0.
+    assert placement.place_counters(s, "leaf_local")\
+        .shared_bank_counters() == (0, 0, 0)
+    assert placement.place_counters(s, "tile_interleaved")\
+        .shared_bank_counters() == (0, 0, 0)
+    assert placement.place_counters(s, "group_hub")\
+        .shared_bank_counters() == (128, 0, 0)
+    assert placement.place_counters(s, "central")\
+        .shared_bank_counters() == (128, 8, 0)
+
+
+def test_explicit_placement_encoding():
+    s = barrier.mixed_radix_tree((8, 16, 8))
+    pl = placement.explicit_placement(s, bank_offsets=[32, 0, 7],
+                                      bank_strides=[8, 0, 4])
+    assert pl.banks[0][:3] == (32, 40, 48)
+    assert set(pl.banks[1]) == {0}            # stride 0 -> one bank
+    assert pl.banks[2] == (7,)
+    assert pl.shared_bank_counters()[1] == 8
+    with pytest.raises(ValueError):
+        placement.explicit_placement(s, bank_offsets=[0, 0])
+    with pytest.raises(ValueError):
+        placement.explicit_placement(s, bank_offsets=[0, 0, 0],
+                                     bank_strides=[1, 1])
+
+
+# ---------------------------------------------------------------------------
+# Backward-compat oracle: leaf-local == the deprecated span heuristic.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pes", [64, 256, 1024])
+def test_leaf_local_reproduces_span_heuristic(n_pes):
+    """The paper's placement, derived from PE<->bank locality classes,
+    must reproduce the legacy 1/3/5 per-level latencies bit-for-bit for
+    EVERY composition — the deprecation-safety oracle for
+    topology.access_latency."""
+    for s in tuning.all_schedules(n_pes):
+        pl = placement.place_counters(s, "leaf_local")
+        for lvl, row in zip(s.levels, pl.latencies):
+            want = DEFAULT.access_latency(lvl.span)
+            assert all(lat == want for lat in row), (s.name, lvl.span)
+
+
+def test_leaf_local_simulation_matches_unplaced_bitforbit():
+    arr = 700.0 * jax.random.uniform(KEY, (1024,))
+    for sizes in [(8, 16, 8), (2, 8, 8, 8), (1024,), (4, 256)]:
+        s = barrier.mixed_radix_tree(sizes)
+        pl = placement.place_counters(s, "leaf_local")
+        got = barrier_sim.simulate(arr, s, placement=pl)
+        ref = barrier_sim.simulate_reference(arr, s)
+        for name, a, b in zip(got._fields, got, ref):
+            assert float(a) == float(b), (sizes, name)
+
+
+# ---------------------------------------------------------------------------
+# Per-bank serialization: contention is real and matches the
+# independent bank-queue oracle.
+# ---------------------------------------------------------------------------
+
+def test_same_bank_siblings_contend():
+    """Two sibling counters on ONE bank must serialize against each
+    other: strictly larger span than the same tree with the counters on
+    distinct banks (the subsystem's acceptance criterion)."""
+    s = barrier.mixed_radix_tree((512, 2))
+    shared = placement.explicit_placement(s, bank_offsets=[0, 0],
+                                          bank_strides=[0, 0])
+    distinct = placement.explicit_placement(s, bank_offsets=[0, 0])
+    arr = jnp.zeros(1024)
+    span_shared = float(barrier_sim.simulate(
+        arr, s, placement=shared).span_cycles)
+    span_distinct = float(barrier_sim.simulate(
+        arr, s, placement=distinct).span_cycles)
+    # 1024 zero-delay atomics through one bank vs two parallel queues
+    # of 512: the shared-bank barrier pays the full serialization.
+    assert span_shared > span_distinct + 500
+
+
+def test_scanned_core_matches_bank_queue_oracle():
+    """The scanned per-bank serialization == explicit per-bank request
+    queues (independent numpy oracle), for every strategy including the
+    heavily contended ones."""
+    for sizes in [(8, 16, 8), (2, 2, 2, 2, 2, 2, 2, 2, 2, 2), (1024,),
+                  (4, 256), (32, 32)]:
+        s = barrier.mixed_radix_tree(sizes)
+        for strat in placement.STRATEGIES:
+            pl = placement.place_counters(s, strat)
+            arr = 300.0 * jax.random.uniform(jax.random.PRNGKey(7),
+                                             (1024,))
+            got = barrier_sim.simulate(arr, s, placement=pl)
+            ref = placement.simulate_placed_reference(arr, s, pl)
+            for name, a, b in zip(got._fields, got, ref):
+                assert float(a) == pytest.approx(
+                    float(b), rel=1e-6), (sizes, strat, name)
+
+
+def test_placed_reference_batched_shapes():
+    s = barrier.mixed_radix_tree((8, 8), n_pes=64)
+    pl = placement.place_counters(s, "group_hub")
+    arr = 100.0 * jax.random.uniform(KEY, (2, 3, 64))
+    got = barrier_sim.simulate(arr, s, placement=pl)
+    ref = placement.simulate_placed_reference(arr, s, pl)
+    assert got.exit_time.shape == ref.exit_time.shape == (2, 3)
+    np.testing.assert_allclose(np.asarray(got.exit_time),
+                               np.asarray(ref.exit_time), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# One-compile property of placement sweeps.
+# ---------------------------------------------------------------------------
+
+def test_composition_placement_delay_grid_compiles_once():
+    """Full composition x placement x delay grid at N=256 traces the
+    scanned core exactly once."""
+    jax.clear_caches()
+    barrier_sim.TRACE_COUNTS.clear()
+    res = tuning.tune_barrier(jax.random.PRNGKey(11), n_pes=256,
+                              delays=DELAYS, n_trials=4,
+                              placements=placement.STRATEGIES)
+    jax.block_until_ready(res.span_cycles)
+    # 128 compositions x 4 strategies, aligned metadata.
+    assert res.span_cycles.shape == (512, 4, 4)
+    assert len(res.placements) == 512
+    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+
+
+def test_full_placed_tuner_sweep_1024_compiles_once():
+    """The acceptance-criterion sweep: ALL 512 compositions x every
+    placement strategy x delays at N=1024 through ONE trace of the
+    scanned core, and the placed best matches or beats the best
+    leaf-local uniform radix at every delay."""
+    jax.clear_caches()
+    barrier_sim.TRACE_COUNTS.clear()
+    res = tuning.tune_barrier(jax.random.PRNGKey(42), delays=DELAYS,
+                              n_trials=2,
+                              placements=placement.STRATEGIES)
+    jax.block_until_ready(res.span_cycles)
+    assert res.span_cycles.shape == (2048, 4, 2)
+    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+    for p in tuning.best_per_delay(res):
+        assert p.mean_span <= p.uniform_span, (p.delay, p.schedule.name)
+        # the jointly placed winner carries its placement metadata
+        assert p.placement is None or p.placement.strategy in \
+            placement.STRATEGIES
+
+
+def test_leaf_local_axis_matches_unplaced_sweep_bitforbit():
+    """A placement sweep restricted to leaf_local reproduces the
+    placement-free tuner column-for-column."""
+    scheds = tuning.all_schedules(64)
+    base = tuning.tune_barrier(KEY, 64, delays=(0.0, 512.0), n_trials=4)
+    placed = tuning.tune_barrier(KEY, 64, delays=(0.0, 512.0), n_trials=4,
+                                 placements=("leaf_local",))
+    assert placed.span_cycles.shape == base.span_cycles.shape
+    np.testing.assert_array_equal(np.asarray(placed.span_cycles),
+                                  np.asarray(base.span_cycles))
+    assert placed.names == tuple(s.name + "@leaf_local" for s in scheds)
+
+
+def test_tune_barrier_rejects_placement_objects():
+    s = barrier.mixed_radix_tree((8, 8), n_pes=64)
+    pl = placement.place_counters(s, "central")
+    with pytest.raises(TypeError):
+        tuning.tune_barrier(KEY, 64, placements=(pl,))
+
+
+# ---------------------------------------------------------------------------
+# Joint (schedule, placement) selection + the placed 5G mode.
+# ---------------------------------------------------------------------------
+
+def test_best_placed_schedule_dominates_contended_strategies():
+    sched, pl = tuning.best_placed_schedule(KEY, 256, delay=64.0,
+                                            n_trials=4)
+    assert sched.n_pes == 256
+    # in-model, the paper's conflict-free local placement dominates, so
+    # the joint tuner must never pick a strictly contended strategy
+    assert pl.shared_bank_counters() == (0,) * sched.n_levels
+
+
+def test_5g_placed_mode():
+    app = fiveg.FiveGConfig(n_rx=16, ffts_per_round=1)
+    res = fiveg.compare_barriers(
+        KEY, app, radix=32, modes=("central", "tuned", "placed"))
+    # the placed search space contains every tuned point (leaf_local
+    # strategy x hierarchy-pruned compositions), so joint tuning can
+    # only match or beat the schedule-only tuner up to draw noise
+    assert float(res["speedup_placed"]) >= \
+        float(res["speedup_tuned"]) - 0.05
+    assert float(res["speedup_placed"]) > 1.4
+    # scanned app == placement-aware unrolled oracle
+    got = fiveg.simulate_app(KEY, app, sync="placed")
+    ref = fiveg.simulate_app_reference(KEY, app, sync="placed")
+    for name, a, b in zip(got._fields, got, ref):
+        assert float(a) == pytest.approx(float(b), rel=1e-5), name
+
+
+# ---------------------------------------------------------------------------
+# Locality-class primitives behind the derivation.
+# ---------------------------------------------------------------------------
+
+def test_span_bank_latency_classes():
+    cfg = DEFAULT
+    # PEs 0..7 (tile 0): bank 0 is in-tile, bank 40 (tile 1) in-group,
+    # bank 600 (group 1) cross-group.
+    assert cfg.span_bank_latency(0, 8, 0) == cfg.lat_tile
+    assert cfg.span_bank_latency(0, 8, 40) == cfg.lat_group
+    assert cfg.span_bank_latency(0, 8, 600) == cfg.lat_cluster
+    # spans crossing a tile can never be tile-class, even to bank 0
+    assert cfg.span_bank_latency(0, 16, 0) == cfg.lat_group
+    assert cfg.span_bank_latency(0, 256, 0) == cfg.lat_cluster
+    assert cfg.pe_bank_latency(9, 36) == cfg.lat_tile   # PE 9, tile-1 bank

@@ -64,6 +64,25 @@ def test_scan_matches_oracle_batched():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_mean_residency_batched_definition():
+    """Regression for the residency definition mismatch: the scanned
+    core and the reference oracle must share one mean_residency formula
+    (``exit_time[..., None] - arrivals``) under batched leading
+    shapes, not a scalar-vs-broadcast pair that happens to agree on
+    single episodes."""
+    sched = barrier.mixed_radix_tree((8, 16, 8))
+    arr = 2048.0 * jax.random.uniform(KEY, (4, 3, 1024))
+    got = barrier_sim.simulate(arr, sched)
+    ref = barrier_sim.simulate_reference(arr, sched)
+    assert got.mean_residency.shape == ref.mean_residency.shape == (4, 3)
+    np.testing.assert_array_equal(np.asarray(got.mean_residency),
+                                  np.asarray(ref.mean_residency))
+    # per-episode mean over PEs of (exit - own arrival), by definition
+    one = barrier_sim.simulate(arr[0, 0], sched)
+    want = float(jnp.mean(one.exit_time - arr[0, 0]))
+    assert float(got.mean_residency[0, 0]) == pytest.approx(want, rel=1e-6)
+
+
 def test_simulate_rejects_wrong_width():
     with pytest.raises(ValueError):
         barrier_sim.simulate(jnp.zeros(100), barrier.kary_tree(2))
