@@ -15,6 +15,23 @@ from . import timing
 KEY = jax.random.PRNGKey(3)
 
 
+def tuned_schedule_rows():
+    """The winning per-epoch trees of every tuned sync mode at the
+    fine-grained 16-FFT configuration (the one fig_tuned_tree /
+    fig_placement report), read off ``FiveGResult.stage_schedule`` /
+    ``.global_schedule`` (tuned modes pick their own trees, so the
+    report must say WHICH tree each mode ran)."""
+    app = fiveg.FiveGConfig(n_rx=16, ffts_per_round=1)
+    rows = []
+    for mode in ("tuned", "tuned_partial", "placed", "workload"):
+        res = fiveg.simulate_app(KEY, app, sync=mode)
+        rows.append((f"fig7_{mode}_stage_sched", 0.0,
+                     res.stage_schedule, 0.0))
+        rows.append((f"fig7_{mode}_global_sched", 0.0,
+                     res.global_schedule, 0.0))
+    return rows
+
+
 def run():
     rows = []
     for n_rx in (16, 32, 64):
@@ -40,4 +57,4 @@ def run():
             rows.append((f"{tag}_speedup_serial", steady_us,
                          round(float(res["partial"].speedup_serial), 1),
                          compile_us))
-    return rows
+    return rows + tuned_schedule_rows()

@@ -9,16 +9,19 @@ cluster-class hops.  A second block reports the 5G application under
 ``sync="placed"`` (jointly tuned schedule + counter->bank mapping)
 next to the schedule-only tuner.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import fiveg, placement, tuning
+from repro.core import barrier, barrier_sim, fiveg, placement, topology, tuning
 
 from . import timing
 
 KEY = jax.random.PRNGKey(0)
 DELAYS = [0.0, 128.0, 512.0, 2048.0]
 N_TRIALS = 4   # composition x placement (128 x 4 at N=1024) dominates
+BANKING_FACTORS = (2, 4, 8)   # sensitivity micro-sweep (default is 4)
 
 
 def placement_tradeoff():
@@ -75,5 +78,53 @@ def placed_5g():
     return rows
 
 
+def banking_sensitivity():
+    """Banking-factor sensitivity of the placed tuner: re-derive every
+    strategy's banks/latencies under banking_factor in {2, 4, 8} and
+    re-run the joint composition x placement sweep.  The named
+    strategies allocate banks PROPORTIONALLY to the factor (leaf-local
+    spreads by span*bf, hub/central pile on the same class), so their
+    spans are bf-invariant — itself the finding — while a FIXED
+    32-bank-stride heap allocator (tuned for the default factor 4) IS
+    bf-sensitive: at bf=2 it wraps the halved bank space (64 same-bank
+    counter pairs on the leaf level), at bf=4 every counter lands in
+    its accessors' own Tile, at bf=8 it strides past the Tile into
+    group/cluster classes (extra rows)."""
+    rows = []
+    sizes = (8, 16, 8)
+    arrs = {0: jnp.zeros((4, 1024)),
+            512: 512.0 * jax.random.uniform(KEY, (4, 1024))}
+    for bf in BANKING_FACTORS:
+        cfg = dataclasses.replace(topology.DEFAULT, banking_factor=bf)
+        res, steady_us, compile_us = timing.measure(
+            lambda: tuning.tune_barrier(KEY, delays=(0.0, 512.0),
+                                        n_trials=2, prune="hierarchy",
+                                        placements=placement.STRATEGIES,
+                                        cfg=cfg),
+            warmup=0, iters=1)
+        rows.append((f"banking_bf{bf}_sweep", steady_us,
+                     f"{len(res.schedules)}x2x2", compile_us))
+        spans = jnp.mean(res.span_cycles, axis=-1)      # (S, D)
+        for j, delay in enumerate(res.delays.tolist()):
+            d = int(delay)
+            for strat in placement.STRATEGIES:
+                idx = jnp.asarray([i for i, p in enumerate(res.placements)
+                                   if p.strategy == strat])
+                best = float(jnp.min(spans[idx, j]))
+                rows.append((f"banking_bf{bf}_delay{d}_{strat}", 0.0,
+                             round(best, 1), 0.0))
+        s = barrier.mixed_radix_tree(sizes, cfg=cfg)
+        pl = placement.explicit_placement(s, bank_offsets=[0] * 3,
+                                          bank_strides=[32] * 3, cfg=cfg)
+        for d, arr in arrs.items():
+            span = float(jnp.mean(barrier_sim.simulate(
+                arr, s, cfg, placement=pl).span_cycles))
+            rows.append((f"banking_bf{bf}_delay{d}_heap_stride32", 0.0,
+                         round(span, 1), 0.0))
+        rows.append((f"banking_bf{bf}_heap_shared", 0.0,
+                     sum(pl.shared_bank_counters()), 0.0))
+    return rows
+
+
 def run():
-    return placement_tradeoff() + placed_5g()
+    return placement_tradeoff() + placed_5g() + banking_sensitivity()

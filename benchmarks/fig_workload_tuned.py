@@ -1,0 +1,70 @@
+"""Workload-conditioned tuning (beyond-figure): the hierarchy-pruned
+composition space swept over every Fig. 5/6 kernel's MEASURED arrival
+batch — kernel x schedule x trial through ONE compiled scanned core —
+and the per-kernel tuned schedule reported against the best uniform
+radix on the same arrivals (the radix that wins ``dotp``'s
+atomic-reduction tail loses ``conv2d``'s bimodal border imbalance).  A
+second block runs the 5G app under ``sync="workload"`` (stage and
+FFT->MATMUL barriers tuned separately on their own epoch models) next
+to the uniform-proxy-tuned ``placed`` mode, printing the winning
+per-epoch schedules now exposed by ``FiveGResult``.
+"""
+import jax
+
+from repro.core import barrier, fiveg, tuning
+
+from . import timing
+
+KEY = jax.random.PRNGKey(4)
+N_TRIALS = 4
+
+
+def workload_tuned_kernels():
+    # Hierarchy-pruned compositions + EVERY uniform radix, so the
+    # reported baseline is the true best uniform tree (most uniform
+    # radices straddle a Tile/Group boundary and are pruned away).
+    scheds = tuning.all_schedules(prune="hierarchy")
+    scheds += [s for r in barrier.all_radices()
+               if (s := barrier.kary_tree(r)) not in scheds]
+    res, steady_us, compile_us = timing.measure(
+        lambda: tuning.sweep_workloads(KEY, n_trials=N_TRIALS,
+                                       schedules=scheds),
+        warmup=0, iters=1)
+    rows = [("workload_sweep_grid", steady_us,
+             f"{len(res.schedules)}x{len(res.kernels)}x{N_TRIALS}",
+             compile_us)]
+    for p in tuning.best_per_kernel(res):
+        rows.append((f"workload_{p.kernel}_best_{p.schedule.name}", 0.0,
+                     round(p.mean_span, 1), 0.0))
+        rows.append((f"workload_{p.kernel}_uniform_"
+                     f"{p.uniform_schedule.name}", 0.0,
+                     round(p.uniform_span, 1), 0.0))
+        rows.append((f"workload_{p.kernel}_gain", 0.0,
+                     round(p.uniform_span / max(p.mean_span, 1e-9), 4),
+                     0.0))
+    return rows
+
+
+def workload_5g():
+    app = fiveg.FiveGConfig()   # the paper's 4x16-FFT design point
+    res, steady_us, compile_us = timing.measure(
+        lambda: fiveg.compare_barriers(
+            KEY, app, radix=32,
+            modes=("central", "partial", "placed", "workload")),
+        warmup=0, iters=1)
+    rows = [("workload_5g_compare", steady_us, "4modes", compile_us)]
+    for mode in ("partial", "placed", "workload"):
+        rows.append((f"workload_5g_speedup_{mode}", 0.0,
+                     round(float(res[f"speedup_{mode}"]), 3), 0.0))
+        rows.append((f"workload_5g_syncfrac_{mode}", 0.0,
+                     round(float(res[mode].sync_fraction), 4), 0.0))
+    for mode in ("placed", "workload"):
+        rows.append((f"workload_5g_{mode}_stage_sched", 0.0,
+                     res[mode].stage_schedule, 0.0))
+        rows.append((f"workload_5g_{mode}_global_sched", 0.0,
+                     res[mode].global_schedule, 0.0))
+    return rows
+
+
+def run():
+    return workload_tuned_kernels() + workload_5g()

@@ -8,9 +8,11 @@ Two layers of the tuner API:
    x trial through one compiled program, and `tuning.best_per_delay`
    reads off the winning composition against the best uniform radix —
    the generalized Fig. 4a tuning step.
-2. `sweep.simulate_schedules` replays one measured kernel epoch
-   (workload arrival model) under the whole schedule stack — the
-   per-kernel tuning of Fig. 6, with mixed-radix trees in the race.
+2. `tuning.sweep_workloads` replays every kernel's MEASURED arrival
+   batch (`workloads.arrival_batch`) under the whole schedule stack in
+   one compiled call — the per-kernel tuning of Fig. 6 conditioned on
+   the real arrival shapes, and `tuning.best_per_kernel` reads off the
+   winner per kernel against the best uniform radix.
 3. `tuning.tune_barrier(placements=...)` crosses the composition space
    with the counter-placement strategies of `repro.core.placement`:
    WHERE each counter lives (which L1 bank) becomes a tuned knob, and
@@ -21,7 +23,7 @@ Two layers of the tuner API:
 import jax
 import jax.numpy as jnp
 
-from repro.core import placement, sweep, tuning, workloads
+from repro.core import placement, tuning
 
 KEY = jax.random.PRNGKey(0)
 DELAYS = (0.0, 128.0, 512.0, 2048.0)
@@ -44,23 +46,21 @@ def tune_random_delay():
 
 
 def tune_kernels():
-    """Per-kernel schedule selection (Fig. 6c, mixed-radix edition)."""
-    schedules = tuning.all_schedules()
-    names = [s.name for s in schedules]
-    uniform = [i for i, s in enumerate(schedules) if s.radix]
-    suite = workloads.benchmark_suite()
-    print(f"\n{'kernel':10s} {'input':12s} {'tuned schedule':>16s} "
+    """Per-kernel schedule selection on MEASURED arrivals (Fig. 6c,
+    workload-conditioned edition): every kernel's arrival batch x every
+    composition through one compiled call."""
+    res = tuning.sweep_workloads(KEY, n_trials=4)
+    central = res.names.index("1024")
+    spans = res.mean_span                              # (S, K)
+    print(f"\nswept {len(res.schedules)} compositions x "
+          f"{len(res.kernels)} kernels x 4 trials in one compile")
+    print(f"{'kernel':22s} {'tuned schedule':>16s} "
           f"{'vs uniform':>10s} {'vs central':>10s}")
-    for kernel, dims in suite.items():
-        for label, fn in dims.items():
-            res = sweep.simulate_schedules(fn(KEY), schedules)
-            t = jnp.asarray(res.exit_time)
-            i = int(jnp.argmin(t))
-            iu = uniform[int(jnp.argmin(t[jnp.asarray(uniform)]))]
-            central = names.index("1024")
-            print(f"{kernel:10s} {label:12s} {names[i]:>16s} "
-                  f"{float(t[iu] / t[i]):9.3f}x "
-                  f"{float(t[central] / t[i]):9.2f}x")
+    for j, p in enumerate(tuning.best_per_kernel(res)):
+        c = float(spans[central, j])
+        print(f"{p.kernel:22s} {p.schedule.name:>16s} "
+              f"{p.uniform_span / p.mean_span:9.3f}x "
+              f"{c / p.mean_span:9.2f}x")
 
 
 def tune_placement():

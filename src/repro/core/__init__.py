@@ -28,21 +28,26 @@ from .collectives import (FLAT, HIERARCHICAL, SyncConfig, gather_param,
 from .placement import (STRATEGIES, CounterPlacement, all_placements,
                         derive_latencies, explicit_placement, place_counters,
                         simulate_placed_reference)
-from .sweep import (SweepResult, best_radix_per_delay, radix_tables,
-                    simulate_radices, simulate_schedules, sweep_barrier,
-                    sweep_schedules)
+from .sweep import (ArrivalSweepResult, SweepResult, best_radix_per_delay,
+                    radix_tables, simulate_radices, simulate_schedules,
+                    sweep_arrivals, sweep_barrier, sweep_schedules)
 from .topology import DEFAULT, TeraPoolConfig
-from .tuning import (TunedPoint, all_schedules, best_per_delay,
-                     best_placed_schedule, best_schedule,
-                     enumerate_compositions, hierarchy_compositions,
-                     pareto_schedules, tune_barrier)
+from .tuning import (TunedPoint, WorkloadPoint, all_schedules,
+                     best_per_delay, best_per_kernel, best_placed_schedule,
+                     best_schedule, enumerate_compositions,
+                     hierarchy_compositions, pareto_schedules, tune_barrier,
+                     tune_for_arrivals, tune_for_workload, tuned_for_workload,
+                     sweep_workloads)
+from .workloads import ARRIVAL_KERNELS, FIG6_KERNELS, arrival_batch
 
 __all__ = [
-    "BarrierResult", "BarrierSchedule", "CounterPlacement", "DEFAULT",
+    "ARRIVAL_KERNELS", "ArrivalSweepResult", "BarrierResult",
+    "BarrierSchedule", "CounterPlacement", "DEFAULT", "FIG6_KERNELS",
     "FLAT", "HIERARCHICAL", "LevelTable", "STRATEGIES", "SweepResult",
-    "SyncConfig", "TeraPoolConfig", "TunedPoint", "all_placements",
-    "all_radices", "all_schedules", "barrier", "barrier_sim",
-    "best_per_delay", "best_placed_schedule", "best_radix_per_delay",
+    "SyncConfig", "TeraPoolConfig", "TunedPoint", "WorkloadPoint",
+    "all_placements", "all_radices", "all_schedules", "arrival_batch",
+    "barrier", "barrier_sim", "best_per_delay", "best_per_kernel",
+    "best_placed_schedule", "best_radix_per_delay",
     "best_schedule", "central_counter", "collectives", "compose",
     "counter_width", "derive_latencies", "describe",
     "enumerate_compositions", "explicit_placement", "fiveg",
@@ -52,7 +57,9 @@ __all__ = [
     "partial_psum", "place_counters", "placement", "radix_tables",
     "schedule_name", "shard_slice", "simulate", "simulate_placed_reference",
     "simulate_radices", "simulate_schedules", "simulate_reference",
-    "simulate_table", "stack_tables", "sweep", "sweep_barrier",
-    "sweep_schedules", "sync_gradient", "topology", "tree_psum",
-    "tune_barrier", "tuning", "uniform_arrivals", "workloads",
+    "simulate_table", "stack_tables", "sweep", "sweep_arrivals",
+    "sweep_barrier", "sweep_schedules", "sweep_workloads", "sync_gradient",
+    "topology", "tree_psum", "tune_barrier", "tune_for_arrivals",
+    "tune_for_workload", "tuned_for_workload", "tuning",
+    "uniform_arrivals", "workloads",
 ]

@@ -189,11 +189,15 @@ def compose(*schedules: BarrierSchedule,
     return mixed_radix_tree(sizes, cfg=cfg, partial=partial)
 
 
-def schedule_name(schedule: BarrierSchedule) -> str:
+def schedule_name(schedule: BarrierSchedule, placement=None) -> str:
     """Canonical, sortable name: level sizes joined leaf-to-root
-    (``"8x16x8"``), with a ``p`` suffix for partial barriers."""
+    (``"8x16x8"``), with a ``p`` suffix for partial barriers and an
+    ``@strategy`` suffix when a counter placement is attached (e.g.
+    ``"8x16x8@leaf_local"``) — the one label format every sweep result
+    and 5G report uses."""
     base = "x".join(str(g) for g in schedule.sizes)
-    return base + ("p" if schedule.partial else "")
+    base += "p" if schedule.partial else ""
+    return base + (f"@{placement.strategy}" if placement else "")
 
 
 def describe(schedule: BarrierSchedule) -> str:

@@ -22,6 +22,20 @@ Barrier options (the paper's comparison):
                         the counters (:mod:`repro.core.placement`), so
                         bank contention and access locality are tuned
                         together with the tree shape.
+  * ``workload``      — per-EPOCH workload specialization: the stage
+                        barriers are tuned (jointly with placement) on
+                        the FFT butterfly-stage arrival model, and the
+                        global barrier SEPARATELY on its own epochs
+                        (the zero-scatter FFT->MATMUL dependency plus
+                        the beamforming-row scatter), via
+                        :func:`repro.core.tuning.tune_for_arrivals` —
+                        each barrier sees the arrival distribution it
+                        will actually face, not a uniform proxy.
+
+Every result exposes the winning stage/global schedule names
+(``FiveGResult.stage_schedule`` / ``.global_schedule``,
+``@strategy``-suffixed when a tuned counter placement is attached) so
+reports can show WHICH tree each mode ended up running.
 
 Scheduling ``ffts_per_round`` independent FFTs between barriers
 amortizes synchronization (Fig. 3): more FFTs per round -> lower sync
@@ -60,6 +74,7 @@ class FiveGConfig:
     stage_cycles: float = 1000.0
     stage_jitter_frac: float = 0.10
     mac_cycles: float = 2.5     # beamforming MAC incl. row broadcast
+    mm_jitter_frac: float = 0.05   # beamforming-epoch contention scatter
 
     @property
     def n_stages(self) -> int:
@@ -87,6 +102,18 @@ class FiveGConfig:
             raise ValueError("ffts_per_round must divide FFTs per subset")
         return per_subset // self.ffts_per_round
 
+    def mm_work(self, n_pes: int) -> float:
+        """Per-PE cycles of the beamforming MATMUL epoch: (N_B x N_RX)
+        @ (N_RX x N_SC) outputs column-split over ``n_pes`` PEs."""
+        return self.n_beams * self.n_sc / n_pes * self.n_rx \
+            * self.mac_cycles
+
+    def mm_jitter(self, n_pes: int) -> float:
+        """Arrival scatter entering the barrier that closes the
+        beamforming epoch (concurrent row reads -> moderate
+        contention)."""
+        return self.mm_jitter_frac * self.mm_work(n_pes)
+
 
 class FiveGResult(NamedTuple):
     total_cycles: jnp.ndarray      # end-to-end parallel runtime
@@ -94,6 +121,11 @@ class FiveGResult(NamedTuple):
     sync_fraction: jnp.ndarray     # sync_cycles / total_cycles
     serial_cycles: jnp.ndarray     # single-Snitch-core runtime
     speedup_serial: jnp.ndarray    # serial / parallel
+    # Winning schedule names (static metadata, not arrays): the stage
+    # and FFT->MATMUL/global barrier trees this run synchronized with,
+    # "@strategy"-suffixed where a tuned counter placement is attached.
+    stage_schedule: str = ""
+    global_schedule: str = ""
 
 
 def _epoch_arrivals(key: jax.Array, start: jnp.ndarray, work: float,
@@ -135,13 +167,43 @@ def _placed_schedule(n_pes: int, delay: float, cfg: TeraPoolConfig):
         cfg=cfg, prune=prune)
 
 
+@functools.lru_cache(maxsize=None)
+def _workload_schedules(app: FiveGConfig, cfg: TeraPoolConfig):
+    """Per-epoch workload-tuned (schedule, placement) pairs for the
+    ``sync="workload"`` mode, cached per (app, cfg).
+
+    The STAGE barrier is tuned (jointly with counter placement) on the
+    FFT butterfly-stage arrival model; the GLOBAL barrier separately on
+    the epochs it actually closes — the FFT->MATMUL data dependency
+    (zero scatter: the last stage barrier equalized every PE) stacked
+    with the beamforming-row epoch (5% contention scatter) along the
+    trial axis, so its argmin minimizes the summed cost of both
+    episodes rather than assuming one uniform proxy scatter."""
+    from . import tuning, workloads
+    from .placement import STRATEGIES
+    n = cfg.n_pes
+    prune = "none" if n <= 256 else "hierarchy"
+    k_stage, k_mm = jax.random.split(jax.random.PRNGKey(_TUNING_SEED))
+    stage_arr = workloads.arrival_batch(k_stage, "fiveg_fft_stage",
+                                        (8, n), cfg=cfg, app=app)
+    stage_sched, stage_plc, _ = tuning.tune_for_arrivals(
+        stage_arr, cfg, prune=prune, placements=STRATEGIES)
+    dep_arr = jnp.zeros((4, n), jnp.float32)
+    mm_arr = workloads.arrival_batch(k_mm, "fiveg_matmul_row",
+                                     (4, n), cfg=cfg, app=app)
+    global_sched, global_plc, _ = tuning.tune_for_arrivals(
+        jnp.concatenate([dep_arr, mm_arr]), cfg, prune=prune,
+        placements=STRATEGIES)
+    return stage_sched, stage_plc, global_sched, global_plc
+
+
 def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
                        cfg: TeraPoolConfig):
     """Stage + global schedules, their counter placements (None =
     span-heuristic fallback) and the partial-group count for a mode."""
     n = cfg.n_pes
     jitter = app.epoch_jitter
-    stage_plc = global_plc = None
+    stage_plc = global_plc = global_sched = None
     if sync == "central":
         stage_sched = barrier.central_counter(cfg=cfg)
         partial_groups = 1
@@ -160,13 +222,17 @@ def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
     elif sync == "placed":
         stage_sched, stage_plc = _placed_schedule(n, jitter, cfg)
         partial_groups = 1
+    elif sync == "workload":
+        (stage_sched, stage_plc,
+         global_sched, global_plc) = _workload_schedules(app, cfg)
+        partial_groups = 1
     else:
         raise ValueError(f"unknown sync mode {sync!r}")
     if sync in ("tuned", "tuned_partial"):
         global_sched = _tuned_schedule(n, jitter, False, cfg)
     elif sync == "placed":
         global_sched, global_plc = stage_sched, stage_plc
-    else:
+    elif global_sched is None:   # modes without their own global tree
         global_sched = barrier.kary_tree(min(radix, 32), cfg=cfg)
     return stage_sched, global_sched, partial_groups, stage_plc, global_plc
 
@@ -175,7 +241,8 @@ def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
          static_argnames=("n_epochs", "partial_groups", "n_pes", "cfg"))
 def _app_core(key: jax.Array, stage_table: LevelTable,
               global_table: LevelTable, epoch_work: jnp.ndarray,
-              jitter: jnp.ndarray, mm_work: jnp.ndarray, *, n_epochs: int,
+              jitter: jnp.ndarray, mm_work: jnp.ndarray,
+              mm_jitter: jnp.ndarray, *, n_epochs: int,
               partial_groups: int, n_pes: int,
               cfg: TeraPoolConfig):
     """Scanned epoch pipeline: one compile per sync mode.
@@ -213,7 +280,7 @@ def _app_core(key: jax.Array, stage_table: LevelTable,
 
     # Beamforming MATMUL: (N_B x N_RX) @ (N_RX x N_SC), column-wise over
     # all PEs; concurrent row reads -> moderate contention scatter.
-    arr = _epoch_arrivals(keys[n_epochs], t, mm_work, 0.05 * mm_work, n_pes)
+    arr = _epoch_arrivals(keys[n_epochs], t, mm_work, mm_jitter, n_pes)
     res = _scan_core(arr, global_table, cfg)
     return res.exit_time, sync_acc + res.mean_residency
 
@@ -223,9 +290,11 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                  cfg: TeraPoolConfig = DEFAULT) -> FiveGResult:
     """Simulate the full OFDM + beamforming pipeline under one barrier
     strategy.  ``sync`` in {"central", "tree", "partial", "tuned",
-    "tuned_partial", "placed"}; ``radix`` is ignored by the tuned and
-    placed modes (the schedule — and for ``placed`` the counter->bank
-    mapping too — comes from the mixed-radix tuner).
+    "tuned_partial", "placed", "workload"}; ``radix`` is ignored by the
+    tuned, placed and workload modes (the schedule — and for
+    ``placed``/``workload`` the counter->bank mapping too — comes from
+    the mixed-radix tuner; ``workload`` additionally tunes the stage
+    and global barriers SEPARATELY on their own epoch arrival models).
 
     The ~25-epoch pipeline runs as one jitted ``lax.scan``; changing the
     radix — or swapping in any tuned schedule or placement of the same
@@ -243,12 +312,11 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     epoch_work = app.epoch_work
     jitter = app.epoch_jitter
     n_epochs = app.rounds * app.n_stages
-    outs_per_pe = app.n_beams * app.n_sc / n
-    mm_work = outs_per_pe * app.n_rx * app.mac_cycles
 
     total, sync_acc = _app_core(
         key, stage_table, global_table, jnp.float32(epoch_work),
-        jnp.float32(jitter), jnp.float32(mm_work), n_epochs=n_epochs,
+        jnp.float32(jitter), jnp.float32(app.mm_work(n)),
+        jnp.float32(app.mm_jitter(n)), n_epochs=n_epochs,
         partial_groups=partial_groups, n_pes=n, cfg=cfg)
 
     # Serial single-core reference (no barriers, same per-PE work model).
@@ -262,6 +330,8 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         sync_fraction=sync_acc / total,
         serial_cycles=serial,
         speedup_serial=serial / total,
+        stage_schedule=barrier.schedule_name(stage_sched, stage_plc),
+        global_schedule=barrier.schedule_name(global_sched, global_plc),
     )
 
 
@@ -308,9 +378,8 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     sync_acc = sync_acc + res.mean_residency
 
     # Beamforming MATMUL (see _app_core).
-    outs_per_pe = app.n_beams * app.n_sc / n
-    mm_work = outs_per_pe * app.n_rx * app.mac_cycles
-    arr = _epoch_arrivals(keys[-2], t, mm_work, 0.05 * mm_work, n)
+    arr = _epoch_arrivals(keys[-2], t, jnp.float32(app.mm_work(n)),
+                          jnp.float32(app.mm_jitter(n)), n)
     res = ref(arr, global_sched, global_plc)
     total = res.exit_time
     sync_acc = sync_acc + res.mean_residency
@@ -326,6 +395,8 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         sync_fraction=sync_acc / total,
         serial_cycles=serial,
         speedup_serial=serial / total,
+        stage_schedule=barrier.schedule_name(stage_sched, stage_plc),
+        global_schedule=barrier.schedule_name(global_sched, global_plc),
     )
 
 
@@ -335,9 +406,10 @@ def compare_barriers(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                      modes: tuple = ("central", "tree", "partial")) -> dict:
     """Fig. 7 comparison; returns per-strategy results + per-mode
     speedups over the central-counter baseline.  Pass ``modes``
-    including ``"tuned"`` / ``"tuned_partial"`` / ``"placed"`` to
-    compare the mixed-radix tuner's schedules (and the jointly tuned
-    counter placement) against the fixed-radix strategies."""
+    including ``"tuned"`` / ``"tuned_partial"`` / ``"placed"`` /
+    ``"workload"`` to compare the mixed-radix tuner's schedules (the
+    jointly tuned counter placement, and the per-epoch workload
+    specialization) against the fixed-radix strategies."""
     if "central" not in modes:
         raise ValueError("modes must include the 'central' baseline")
     out = {}

@@ -18,6 +18,12 @@ Entry points:
   seed path exactly.
 * :func:`sweep_barrier` — the Fig. 4 grid: :func:`sweep_schedules`
   specialized to the uniform-radix stack.
+* :func:`sweep_arrivals` — DATA-DEPENDENT arrivals: whole stacks of
+  measured per-PE arrival matrices (kernel x trial, e.g. the Fig. 5/6
+  workload models of :mod:`repro.core.workloads`) swept across a
+  schedule (x placement) stack through the same single compile — the
+  engine behind the workload-conditioned tuner
+  (:func:`repro.core.tuning.sweep_workloads`).
 * :func:`simulate_schedules` / :func:`simulate_radices` — fixed
   arrivals (e.g. one kernel's epoch, Fig. 6) swept across a schedule
   stack in one call.
@@ -34,6 +40,19 @@ from . import barrier
 from .barrier import LevelTable
 from .barrier_sim import BarrierResult, _scan_core
 from .topology import DEFAULT, TeraPoolConfig
+
+
+def _stack_radices(schedules: tuple) -> jnp.ndarray:
+    """(S,) uniform radix per stacked schedule (0 where mixed-radix)."""
+    return jnp.asarray([s.radix for s in schedules], jnp.int32)
+
+
+def _stack_names(schedules: tuple, placements: tuple) -> tuple:
+    """Canonical per-point labels, ``@strategy``-suffixed where an
+    explicit placement is attached (shared by both result types)."""
+    placs = placements or (None,) * len(schedules)
+    return tuple(barrier.schedule_name(s, p)
+                 for s, p in zip(schedules, placs))
 
 
 class SweepResult(NamedTuple):
@@ -61,16 +80,13 @@ class SweepResult(NamedTuple):
     @property
     def radices(self) -> jnp.ndarray:
         """(S,) uniform radix per schedule (0 where mixed-radix)."""
-        return jnp.asarray([s.radix for s in self.schedules], jnp.int32)
+        return _stack_radices(self.schedules)
 
     @property
     def names(self) -> tuple:
         """Canonical schedule names, e.g. ``("2x8x8x8", "8x16x8")``,
         suffixed ``@strategy`` where an explicit placement is attached."""
-        placs = self.placements or (None,) * len(self.schedules)
-        return tuple(
-            barrier.schedule_name(s) + (f"@{p.strategy}" if p else "")
-            for s, p in zip(self.schedules, placs))
+        return _stack_names(self.schedules, self.placements)
 
     @property
     def mean_span(self) -> jnp.ndarray:
@@ -81,6 +97,41 @@ class SweepResult(NamedTuple):
     def mean_residency_grid(self) -> jnp.ndarray:
         """(S, D) mean per-PE barrier residency, averaged over trials."""
         return jnp.mean(self.mean_residency, axis=-1)
+
+
+class ArrivalSweepResult(NamedTuple):
+    """Per-point timings over a (schedule[, placement], kernel, trial)
+    grid — the data-dependent sibling of :class:`SweepResult`.
+
+    Every array field is ``(n_schedules, n_kernels, n_trials)``;
+    ``kernels`` echoes the arrival-stack axis (kernel names, or
+    positional labels when none were given) and ``schedules`` /
+    ``placements`` align exactly as in :class:`SweepResult`.
+    """
+
+    schedules: tuple              # tuple[BarrierSchedule], length S
+    kernels: tuple                # tuple[str], length K
+    exit_time: jnp.ndarray        # (S, K, T)
+    last_arrival: jnp.ndarray     # (S, K, T)
+    span_cycles: jnp.ndarray      # (S, K, T)
+    mean_residency: jnp.ndarray   # (S, K, T)
+    placements: tuple = ()        # tuple[CounterPlacement | None], length S
+
+    @property
+    def radices(self) -> jnp.ndarray:
+        """(S,) uniform radix per schedule (0 where mixed-radix)."""
+        return _stack_radices(self.schedules)
+
+    @property
+    def names(self) -> tuple:
+        """Canonical schedule names, ``@strategy``-suffixed where an
+        explicit placement is attached (see :class:`SweepResult`)."""
+        return _stack_names(self.schedules, self.placements)
+
+    @property
+    def mean_span(self) -> jnp.ndarray:
+        """(S, K) Fig. 4a metric per kernel, averaged over trials."""
+        return jnp.mean(self.span_cycles, axis=-1)
 
 
 def radix_tables(radices: Sequence[int], n_pes: int | None = None,
@@ -145,6 +196,61 @@ def sweep_barrier(key: jax.Array, radices: Sequence[int] | None = None,
         radices = barrier.all_radices(n, cfg)
     scheds = [barrier.kary_tree(r, n_pes=n, cfg=cfg) for r in radices]
     return sweep_schedules(key, scheds, delays, n_trials, cfg)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _arrival_grid(tables: LevelTable, arrivals: jnp.ndarray,
+                  cfg: TeraPoolConfig) -> BarrierResult:
+    """(S, K, T) grid of data-dependent arrivals through one compile."""
+    per_trial = jax.vmap(lambda tab, a: _scan_core(a, tab, cfg),
+                         in_axes=(None, 0))                  # over T
+    per_kernel = jax.vmap(per_trial, in_axes=(None, 0))      # over K
+    per_sched = jax.vmap(per_kernel, in_axes=(0, None))      # over S
+    return per_sched(tables, arrivals)
+
+
+def sweep_arrivals(arrivals: jnp.ndarray,
+                   schedules: Sequence[barrier.BarrierSchedule],
+                   cfg: TeraPoolConfig = DEFAULT,
+                   placements: Sequence | None = None,
+                   kernels: Sequence[str] | None = None
+                   ) -> ArrivalSweepResult:
+    """Sweep a stack of MEASURED arrival matrices across a schedule
+    (x optional placement) stack in one compiled call.
+
+    ``arrivals`` is ``(n_kernels, n_trials, n_pes)`` — e.g. one
+    :func:`repro.core.workloads.arrival_batch` per kernel, stacked — or
+    ``(n_trials, n_pes)`` for a single workload.  Unlike
+    :func:`sweep_schedules`, whose grid is synthesized from uniform
+    delays inside the jit, the arrivals here are *data*: any kernel's
+    measured scatter (atomic-reduction tails, bimodal border imbalance,
+    ...) flows through the same single compiled scanned core, so the
+    whole kernel x schedule x placement x trial grid costs one compile
+    (trace-count test in tests/test_workload_tuning.py).
+    """
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    if arrivals.ndim == 2:
+        arrivals = arrivals[None]
+    if arrivals.ndim != 3:
+        raise ValueError(
+            f"arrivals must be (n_kernels, n_trials, n_pes) or "
+            f"(n_trials, n_pes), got shape {arrivals.shape}")
+    schedules = tuple(schedules)
+    if schedules and arrivals.shape[-1] != schedules[0].n_pes:
+        raise ValueError(
+            f"arrivals has {arrivals.shape[-1]} PEs, schedules expect "
+            f"{schedules[0].n_pes}")
+    if kernels is not None and len(kernels) != arrivals.shape[0]:
+        raise ValueError(
+            f"{arrivals.shape[0]} arrival stacks but {len(kernels)} "
+            f"kernel names")
+    tables = barrier.stack_tables(schedules, cfg, placements)
+    res = _arrival_grid(tables, arrivals, cfg)
+    kernels = (tuple(kernels) if kernels is not None
+               else tuple(f"workload{i}" for i in range(arrivals.shape[0])))
+    placements = tuple(placements) if placements is not None else ()
+    return ArrivalSweepResult(schedules=schedules, kernels=kernels,
+                              placements=placements, **res._asdict())
 
 
 @partial(jax.jit, static_argnums=(2,))

@@ -25,6 +25,16 @@ space:
 * :func:`best_placed_schedule` — the jointly tuned (schedule,
   placement) pair for one arrival scatter (the 5G ``sync="placed"``
   mode consumes this).
+* :func:`sweep_workloads` / :func:`best_per_kernel` /
+  :func:`tune_for_workload` — WORKLOAD-conditioned tuning: the same
+  one-compile grid driven by each kernel's *measured* arrival
+  distribution (:mod:`repro.core.workloads`) instead of uniform
+  scatters, so the winning schedule reflects e.g. ``dotp``'s
+  atomic-reduction tail or ``conv2d``'s bimodal border imbalance.
+  :func:`tune_for_arrivals` tunes against an explicit arrival matrix
+  (the 5G ``sync="workload"`` per-epoch specialization consumes this),
+  and :func:`tuned_for_workload` is the lru-cached schedule store
+  keyed on (kernel, N, cfg).
 
 Because the uniform radices (and the paper's leaf-local placement) are
 a subset of the enumeration, the tuned best can only match or beat the
@@ -33,13 +43,16 @@ tests/test_placement.py.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import List, NamedTuple, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import barrier, placement as placement_mod, sweep
+from . import workloads as workloads_mod
 from .barrier import BarrierSchedule
 from .placement import CounterPlacement
 from .topology import DEFAULT, TeraPoolConfig
@@ -145,8 +158,21 @@ def tune_barrier(key, n_pes: int | None = None,
     """
     if schedules is None:
         schedules = all_schedules(n_pes, cfg, prune=prune)
+    scheds, placs = _cross_placements(schedules, placements, cfg)
+    return sweep.sweep_schedules(key, scheds, delays, n_trials, cfg,
+                                 placements=placs)
+
+
+def _cross_placements(schedules: Sequence[BarrierSchedule],
+                      placements: Sequence[str] | None,
+                      cfg: TeraPoolConfig
+                      ) -> Tuple[Sequence[BarrierSchedule],
+                                 Sequence[CounterPlacement] | None]:
+    """Cross a schedule stack with named placement strategies into
+    aligned (schedules, placements) stacks; ``None`` passes the
+    placement-free stack through."""
     if placements is None:
-        return sweep.sweep_schedules(key, schedules, delays, n_trials, cfg)
+        return tuple(schedules), None
     for strat in placements:
         if not isinstance(strat, str):
             raise TypeError(
@@ -158,8 +184,7 @@ def tune_barrier(key, n_pes: int | None = None,
         for s in schedules:
             scheds.append(s)
             placs.append(placement_mod.place_counters(s, strat, cfg))
-    return sweep.sweep_schedules(key, scheds, delays, n_trials, cfg,
-                                 placements=placs)
+    return scheds, placs
 
 
 class TunedPoint(NamedTuple):
@@ -179,22 +204,37 @@ def _is_baseline(plc) -> bool:
     return plc is None or plc.strategy == "leaf_local"
 
 
-def best_per_delay(res: sweep.SweepResult) -> List[TunedPoint]:
-    """The argmin-span (schedule, placement) at each delay, paired with
-    the best UNIFORM radix under the paper's leaf-local placement at
-    that delay (the Fig. 4a baseline)."""
-    spans = jnp.mean(res.span_cycles, axis=-1)          # (S, D)
+def _uniform_baseline(res) -> Tuple[tuple, List[int]]:
+    """The per-point placements of a sweep result plus the indices of
+    its baseline-placed uniform-radix schedules (the shared selection
+    scaffolding of :func:`best_per_delay` / :func:`best_per_kernel`)."""
     placs = res.placements or (None,) * len(res.schedules)
     uniform = [i for i, s in enumerate(res.schedules)
                if s.radix and _is_baseline(placs[i])]
     if not uniform:
         raise ValueError(
             "schedule stack contains no baseline-placed uniform radix")
+    return placs, uniform
+
+
+def _column_winners(col: jnp.ndarray, uniform: List[int]) -> Tuple[int, int]:
+    """(overall argmin, argmin among the uniform baseline) of one span
+    column."""
+    i = int(jnp.argmin(col))
+    iu = uniform[int(jnp.argmin(col[jnp.asarray(uniform)]))]
+    return i, iu
+
+
+def best_per_delay(res: sweep.SweepResult) -> List[TunedPoint]:
+    """The argmin-span (schedule, placement) at each delay, paired with
+    the best UNIFORM radix under the paper's leaf-local placement at
+    that delay (the Fig. 4a baseline)."""
+    spans = jnp.mean(res.span_cycles, axis=-1)          # (S, D)
+    placs, uniform = _uniform_baseline(res)
     out = []
     for j, delay in enumerate(res.delays.tolist()):
         col = spans[:, j]
-        i = int(jnp.argmin(col))
-        iu = uniform[int(jnp.argmin(col[jnp.asarray(uniform)]))]
+        i, iu = _column_winners(col, uniform)
         out.append(TunedPoint(
             delay=float(delay), schedule=res.schedules[i],
             mean_span=float(col[i]),
@@ -246,3 +286,142 @@ def best_placed_schedule(key, n_pes: int | None = None, delay: float = 0.0,
                        cfg=cfg, schedules=schedules, placements=placements)
     i = int(jnp.argmin(jnp.mean(res.span_cycles, axis=-1)[:, 0]))
     return res.schedules[i], res.placements[i]
+
+
+# ---------------------------------------------------------------------------
+# Workload-conditioned tuning: measured arrival distributions as the
+# tuning axis (the Fig. 5/6 kernels + the 5G epochs), not uniform delays.
+# ---------------------------------------------------------------------------
+
+class WorkloadPoint(NamedTuple):
+    """The winning schedule (+ placement) for one kernel's measured
+    arrival distribution."""
+
+    kernel: str
+    schedule: BarrierSchedule
+    mean_span: float              # its Fig. 4a metric on these arrivals
+    uniform_schedule: BarrierSchedule   # best baseline-placed uniform radix
+    uniform_span: float
+    placement: object = None      # CounterPlacement | None of the winner
+
+
+def sweep_workloads(key, kernels: Sequence[str] | None = None,
+                    n_pes: int | None = None, n_trials: int = 8,
+                    cfg: TeraPoolConfig = DEFAULT, *,
+                    prune: str = "none",
+                    schedules: Sequence[BarrierSchedule] | None = None,
+                    placements: Sequence[str] | None = None
+                    ) -> sweep.ArrivalSweepResult:
+    """Sweep every kernel's MEASURED arrival distribution across the
+    schedule (x placement) stack in one compiled call.
+
+    Each kernel in ``kernels`` (default: the full Fig. 5/6 suite,
+    :data:`repro.core.workloads.FIG6_KERNELS`) contributes an
+    ``(n_trials, N)`` batch from :func:`repro.core.workloads.
+    arrival_batch` under its own key split; the stacked
+    kernel x schedule x placement x trial grid then reuses the single
+    compiled scanned core via :func:`repro.core.sweep.sweep_arrivals` —
+    same one-compile property as the uniform-delay tuner, with
+    data-dependent arrivals.
+    """
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    if kernels is None:
+        kernels = workloads_mod.FIG6_KERNELS
+    kernels = tuple(kernels)
+    if not kernels:
+        raise ValueError("need at least one kernel to sweep")
+    keys = jax.random.split(key, len(kernels))
+    arrivals = jnp.stack([
+        workloads_mod.arrival_batch(k, kernel, (n_trials, n), cfg=cfg)
+        for k, kernel in zip(keys, kernels)])
+    if schedules is None:
+        schedules = all_schedules(n, cfg, prune=prune)
+    scheds, placs = _cross_placements(schedules, placements, cfg)
+    return sweep.sweep_arrivals(arrivals, scheds, cfg, placements=placs,
+                                kernels=kernels)
+
+
+def best_per_kernel(res: sweep.ArrivalSweepResult) -> List[WorkloadPoint]:
+    """The argmin-span (schedule, placement) for each kernel's measured
+    arrivals, paired with the best baseline-placed UNIFORM radix on the
+    same arrivals (the Fig. 6 per-kernel radix-selection baseline)."""
+    spans = jnp.mean(res.span_cycles, axis=-1)          # (S, K)
+    placs, uniform = _uniform_baseline(res)
+    out = []
+    for j, kernel in enumerate(res.kernels):
+        col = spans[:, j]
+        i, iu = _column_winners(col, uniform)
+        out.append(WorkloadPoint(
+            kernel=str(kernel), schedule=res.schedules[i],
+            mean_span=float(col[i]),
+            uniform_schedule=res.schedules[iu],
+            uniform_span=float(col[iu]),
+            placement=placs[i]))
+    return out
+
+
+def tune_for_workload(key, kernel: str, n_pes: int | None = None,
+                      n_trials: int = 8, cfg: TeraPoolConfig = DEFAULT, *,
+                      prune: str = "none",
+                      placements: Sequence[str] | None = None
+                      ) -> WorkloadPoint:
+    """Tune one kernel: its measured arrival batch through the full
+    schedule (x placement) stack, argmin by mean span.
+
+    Because the stack is a superset of every uniform radix (and, with
+    ``placements``, of every placed point), the returned schedule can
+    only match or beat both the best uniform radix AND whatever
+    :func:`best_per_delay` selected on uniform scatters, when all are
+    evaluated on this kernel's own arrivals — the acceptance bar of
+    tests/test_workload_tuning.py."""
+    res = sweep_workloads(key, (kernel,), n_pes, n_trials, cfg,
+                          prune=prune, placements=placements)
+    return best_per_kernel(res)[0]
+
+
+def tune_for_arrivals(arrivals, cfg: TeraPoolConfig = DEFAULT, *,
+                      prune: str = "none", partial: bool = False,
+                      schedules: Sequence[BarrierSchedule] | None = None,
+                      placements: Sequence[str] | None = None
+                      ) -> Tuple[BarrierSchedule, CounterPlacement | None,
+                                 float]:
+    """The winning (schedule, placement, mean_span) for an EXPLICIT
+    arrival matrix ``(n_trials, N)`` — e.g. a trace of one 5G epoch, or
+    a mixture of epochs stacked along the trial axis.  The 5G
+    ``sync="workload"`` mode tunes each of its barriers through this."""
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    if arrivals.ndim == 1:
+        arrivals = arrivals[None]
+    if arrivals.ndim != 2:
+        raise ValueError(
+            f"expected an (n_trials, n_pes) arrival matrix, got shape "
+            f"{arrivals.shape}")
+    n = arrivals.shape[-1]
+    if schedules is None:
+        schedules = all_schedules(n, cfg, prune=prune, partial=partial)
+    scheds, placs = _cross_placements(schedules, placements, cfg)
+    res = sweep.sweep_arrivals(arrivals, scheds, cfg, placements=placs)
+    spans = jnp.mean(res.span_cycles, axis=-1)[:, 0]
+    i = int(jnp.argmin(spans))
+    plc = res.placements[i] if res.placements else None
+    return res.schedules[i], plc, float(spans[i])
+
+
+# Fixed seed for the workload tuner's arrival draws: tuning is part of
+# the schedule construction, deterministic per (kernel, N, cfg).
+_WORKLOAD_TUNING_SEED = 65
+
+
+@functools.lru_cache(maxsize=None)
+def tuned_for_workload(kernel: str, n_pes: int | None = None,
+                       cfg: TeraPoolConfig = DEFAULT, *,
+                       prune: str = "none", n_trials: int = 8,
+                       placements: Tuple[str, ...] | None = None
+                       ) -> Tuple[BarrierSchedule, CounterPlacement | None]:
+    """The lru-cached schedule store: the winning (schedule, placement)
+    for ``kernel`` at ``(n_pes, cfg)``, tuned once under a fixed seed
+    and reused by every later consumer (apps, benchmarks, examples)."""
+    p = tune_for_workload(jax.random.PRNGKey(_WORKLOAD_TUNING_SEED),
+                          kernel, n_pes, n_trials, cfg, prune=prune,
+                          placements=placements)
+    return p.schedule, p.placement

@@ -31,6 +31,10 @@ import jax.numpy as jnp
 from .barrier_sim import _serialize_group
 from .topology import DEFAULT, TeraPoolConfig
 
+# NB: the 5G epoch models below import :mod:`repro.core.fiveg` lazily —
+# fiveg never imports this module at top level, so the arrival registry
+# can cover its epochs without an import cycle.
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelCosts:
@@ -170,3 +174,95 @@ def benchmark_suite(cfg: TeraPoolConfig = DEFAULT,
 def cdf_first_last_gap(arrivals: jnp.ndarray) -> jnp.ndarray:
     """Fig. 5 summary statistic: slowest-PE minus fastest-PE runtime."""
     return jnp.max(arrivals, axis=-1) - jnp.min(arrivals, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# 5G application epoch models (Fig. 7): the arrival distributions the
+# per-epoch workload tuner specializes the app's barriers to.
+# ---------------------------------------------------------------------------
+
+def fiveg_stage_arrivals(key: jax.Array, app=None,
+                         cfg: TeraPoolConfig = DEFAULT) -> jnp.ndarray:
+    """Per-PE arrivals into one FFT butterfly-stage barrier of the 5G
+    app (epoch-relative): ``ffts_per_round`` stages of work plus the
+    uniform scheduling jitter of :class:`repro.core.fiveg.FiveGConfig`.
+    Matches the app simulator's epoch model op-for-op."""
+    from .fiveg import FiveGConfig, _epoch_arrivals
+    app = app if app is not None else FiveGConfig()
+    return _epoch_arrivals(key, jnp.float32(0.0), app.epoch_work,
+                           app.epoch_jitter, cfg.n_pes)
+
+
+def fiveg_matmul_arrivals(key: jax.Array, app=None,
+                          cfg: TeraPoolConfig = DEFAULT) -> jnp.ndarray:
+    """Per-PE arrivals into the barrier closing the beamforming MATMUL
+    row epoch: column-distributed MACs with the app simulator's
+    contention scatter (``FiveGConfig.mm_work`` / ``.mm_jitter``, the
+    same model the app runs)."""
+    from .fiveg import FiveGConfig, _epoch_arrivals
+    app = app if app is not None else FiveGConfig()
+    n = cfg.n_pes
+    return _epoch_arrivals(key, jnp.float32(0.0), app.mm_work(n),
+                           app.mm_jitter(n), n)
+
+
+# ---------------------------------------------------------------------------
+# Uniform batched sampler API: kernel name -> stacked arrival matrices.
+# ---------------------------------------------------------------------------
+
+#: Flat Fig. 5/6 kernel x input names ("dotp_1Mi", "conv2d_512x512", ...).
+FIG6_KERNELS: Tuple[str, ...] = tuple(
+    f"{kernel}_{label}" for kernel, dims in benchmark_suite().items()
+    for label in dims)
+
+#: Every named arrival model: the Fig. 5/6 suite plus the 5G epochs.
+ARRIVAL_KERNELS: Tuple[str, ...] = FIG6_KERNELS + ("fiveg_fft_stage",
+                                                   "fiveg_matmul_row")
+
+
+def arrival_fns(cfg: TeraPoolConfig = DEFAULT, costs: KernelCosts = COSTS,
+                app=None) -> Dict[str, ArrivalFn]:
+    """Flat name -> sampler registry behind :data:`ARRIVAL_KERNELS`.
+
+    ``app`` (a :class:`repro.core.fiveg.FiveGConfig`) parameterizes the
+    two 5G epoch models; ``None`` uses the paper's 4x16-FFT design
+    point."""
+    flat: Dict[str, ArrivalFn] = {}
+    for kernel, dims in benchmark_suite(cfg, costs).items():
+        for label, fn in dims.items():
+            flat[f"{kernel}_{label}"] = fn
+    flat["fiveg_fft_stage"] = \
+        lambda key: fiveg_stage_arrivals(key, app, cfg)
+    flat["fiveg_matmul_row"] = \
+        lambda key: fiveg_matmul_arrivals(key, app, cfg)
+    return flat
+
+
+def arrival_batch(key: jax.Array, kernel: str, shape: Tuple[int, int],
+                  cfg: TeraPoolConfig = DEFAULT, costs: KernelCosts = COSTS,
+                  app=None) -> jnp.ndarray:
+    """Stacked per-PE arrival matrices for one kernel's epoch model.
+
+    ``shape = (n_trials, n_pes)``: the result row ``t`` is the kernel's
+    arrival vector under the ``t``-th split of ``key`` — bit-for-bit
+    equal to looping the single-vector sampler over
+    ``jax.random.split(key, n_trials)`` (tests/test_workloads.py), but
+    drawn in one vmapped call so whole trial batches feed the
+    one-compile workload sweeps of :mod:`repro.core.sweep`.
+
+    ``n_pes`` different from ``cfg.n_pes`` re-scales the machine (same
+    problem size on a smaller cluster), matching the ``n_pes`` knob of
+    the sweep/tuning entry points."""
+    n_trials, n_pes = (int(x) for x in shape)
+    if n_trials < 1:
+        raise ValueError(f"need at least one trial, got {n_trials}")
+    if n_pes != cfg.n_pes:
+        cfg = dataclasses.replace(cfg, n_pes=n_pes)
+    fns = arrival_fns(cfg, costs, app)
+    try:
+        fn = fns[kernel]
+    except KeyError:
+        raise ValueError(
+            f"unknown arrival kernel {kernel!r}; choose from "
+            f"{tuple(fns)}") from None
+    return jax.vmap(fn)(jax.random.split(key, n_trials))

@@ -229,6 +229,9 @@ def test_5g_placed_mode():
     got = fiveg.simulate_app(KEY, app, sync="placed")
     ref = fiveg.simulate_app_reference(KEY, app, sync="placed")
     for name, a, b in zip(got._fields, got, ref):
+        if isinstance(a, str):   # winning-schedule names, not timings
+            assert a == b and a, name
+            continue
         assert float(a) == pytest.approx(float(b), rel=1e-5), name
 
 

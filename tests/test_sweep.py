@@ -157,6 +157,9 @@ def test_scanned_app_matches_unrolled(mode):
     got = fiveg.simulate_app(key, app, sync=mode, radix=32)
     ref = fiveg.simulate_app_reference(key, app, sync=mode, radix=32)
     for name, a, b in zip(got._fields, got, ref):
+        if isinstance(a, str):   # winning-schedule names, not timings
+            assert a == b and a, (mode, name)
+            continue
         assert float(a) == pytest.approx(float(b), rel=1e-6), (mode, name)
 
 

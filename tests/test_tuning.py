@@ -191,4 +191,7 @@ def test_5g_tuned_modes():
     got = fiveg.simulate_app(KEY, app, sync="tuned_partial")
     ref = fiveg.simulate_app_reference(KEY, app, sync="tuned_partial")
     for name, a, b in zip(got._fields, got, ref):
+        if isinstance(a, str):   # winning-schedule names, not timings
+            assert a == b and a, name
+            continue
         assert float(a) == pytest.approx(float(b), rel=1e-6), name
