@@ -1,0 +1,89 @@
+"""Core-performance benchmark: the simulator cores head to head.
+
+Times the repo's three hot grids — the Fig. 4 uniform-radix sweep
+(``sweep_barrier``), the exhaustive mixed-radix tuner grid
+(``tune_barrier``: 512 compositions at N=1024), and the workload-
+conditioned arrival sweep (``sweep_arrivals`` via
+``tuning.sweep_workloads``) — under BOTH simulator cores (the
+full-width ``scan`` oracle and the shrinking-width ``telescope``
+production core) at N in {256, 1024}.
+
+Reports steady-state µs per grid POINT (one point = one simulated
+barrier episode) with compile time split out, and writes the whole
+record to ``BENCH_core.json`` at the repo root so the perf trajectory
+of the hottest path is tracked across PRs.
+
+Environment knobs (CI smoke uses both):
+  * ``REPRO_BENCH_CORE_NS``   — comma-separated cluster sizes
+    (default ``256,1024``).
+  * ``BENCH_CORE_JSON``       — output path (default
+    ``<repo>/BENCH_core.json``).
+"""
+import json
+import os
+from pathlib import Path
+
+import jax
+
+from repro.core import sweep, tuning
+
+from . import timing
+
+KEY = jax.random.PRNGKey(0)
+DELAYS = (0.0, 128.0, 512.0, 2048.0)
+CORES = ("scan", "telescope")
+KERNELS = ("dotp_1Mi", "conv2d_256x256", "matmul_256x128x256")
+
+_NS = tuple(int(x) for x in os.environ.get(
+    "REPRO_BENCH_CORE_NS", "256,1024").split(","))
+_OUT = Path(os.environ.get(
+    "BENCH_CORE_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_core.json"))
+
+
+def _grids(n):
+    """(grid_name, n_points, fn(core)) for the three hot consumers."""
+    n_sched = len(tuning.enumerate_compositions(n))
+    n_radices = n.bit_length() - 1
+    yield ("sweep_barrier", n_radices * len(DELAYS) * 16,
+           lambda core: sweep.sweep_barrier(
+               KEY, n_pes=n, delays=DELAYS, n_trials=16, core=core))
+    yield ("tune_barrier", n_sched * len(DELAYS) * 4,
+           lambda core: tuning.tune_barrier(
+               KEY, n, delays=DELAYS, n_trials=4, core=core))
+    yield ("sweep_arrivals", n_sched * len(KERNELS) * 4,
+           lambda core: tuning.sweep_workloads(
+               KEY, KERNELS, n, n_trials=4, core=core))
+
+
+def run():
+    rows = []
+    record = {}
+    for n in _NS:
+        record[f"N={n}"] = {}
+        for gname, n_points, fn in _grids(n):
+            entry = {"points": n_points}
+            for core in CORES:
+                _, steady_us, compile_us = timing.measure(
+                    lambda: fn(core).span_cycles, iters=2)
+                per_point = steady_us / n_points
+                entry[core] = {
+                    "steady_us": round(steady_us, 1),
+                    "compile_us": round(compile_us, 1),
+                    "us_per_point": round(per_point, 3),
+                }
+                rows.append((f"core_{gname}_N{n}_{core}", per_point,
+                             f"{n_points}pts", compile_us))
+            entry["speedup"] = round(
+                entry["scan"]["us_per_point"]
+                / entry["telescope"]["us_per_point"], 2)
+            record[f"N={n}"][gname] = entry
+            rows.append((f"core_{gname}_N{n}_speedup", 0.0,
+                         entry["speedup"], 0.0))
+    _OUT.write_text(json.dumps(record, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -23,17 +23,24 @@ Two layers of the tuner API:
 import jax
 import jax.numpy as jnp
 
-from repro.core import placement, tuning
+from repro.core import placement, sweep, tuning
 
 KEY = jax.random.PRNGKey(0)
 DELAYS = (0.0, 128.0, 512.0, 2048.0)
 
 
 def tune_random_delay():
-    """The generalized Fig. 4a step: best composition per scatter."""
+    """The generalized Fig. 4a step: best composition per scatter.
+
+    Runs on the telescoping simulator core (the default; pass
+    ``core="scan"`` for the full-width oracle core, or ``trial_chunk=``
+    to bound grid memory — both are bit-for-bit identical)."""
     res = tuning.tune_barrier(KEY, delays=DELAYS, n_trials=4)
     print(f"swept {len(res.schedules)} compositions x {len(DELAYS)} "
           f"delays in one compile")
+    print("winners: " + ", ".join(
+        f"d={int(d)}:{name}" for d, name in
+        zip(res.delays.tolist(), sweep.best_schedule_per_delay(res))))
     print(f"{'delay':>6s} {'tuned schedule':>16s} {'span':>8s} "
           f"{'best uniform':>14s} {'span':>8s} {'gain':>6s}")
     for p in tuning.best_per_delay(res):

@@ -259,6 +259,50 @@ class LevelTable(NamedTuple):
         return self.bank_ids.shape[-1]
 
 
+def validate_tail_padding(table: LevelTable, *,
+                          full: bool = True) -> LevelTable:
+    """Assert the canonical-table invariant: identity padding (group
+    size 1, zero latency, zero software overhead) appears only as a
+    contiguous TAIL after the real levels.
+
+    The telescoping simulator core's ``N / 2**i`` survivor bound relies
+    on exactly this: every level before the padding tail has group size
+    >= 2, so the live count at least halves per step, and once padding
+    starts only the single final survivor remains.  Tables built by
+    :func:`level_table` / :func:`stack_tables` satisfy it by
+    construction; hand-built tables are checked here (concrete arrays
+    only — traced tables inside a jit are passed through unchecked).
+
+    ``full=False`` checks the group-size column only (the part the
+    width bound depends on) and skips the per-counter latency/instr
+    columns — the cheap per-call guard ``simulate_table`` applies to
+    tables it did not build itself.
+
+    Returns the table unchanged, for call-site chaining.
+    """
+    import numpy as np
+    if isinstance(table.group_sizes, jax.core.Tracer):
+        return table
+    depth = table.group_sizes.shape[-1]
+    pad = np.asarray(table.group_sizes).reshape((-1, depth)) == 1
+    # padding must be a suffix: no real level (g >= 2) after a g == 1
+    if np.any(pad[:, :-1] & ~pad[:, 1:]):
+        raise ValueError(
+            "level table has identity padding (group size 1) before a "
+            "real level; canonical tables are tail-padded only — build "
+            "them with level_table()/stack_tables()")
+    if not full:
+        return table
+    width = table.latencies.shape[-1]
+    lat = np.asarray(table.latencies).reshape((-1, depth, width))
+    ins = np.asarray(table.instr_cycles).reshape((-1, depth))
+    if np.any(lat[pad] != 0.0) or np.any(ins[pad] != 0.0):
+        raise ValueError(
+            "identity padding levels must carry zero latency and zero "
+            "instruction overhead")
+    return table
+
+
 def max_depth(n_pes: int) -> int:
     """Depth of the deepest tree over ``n_pes`` cores (radix 2)."""
     return max(1, int(math.log2(n_pes)))
@@ -315,12 +359,12 @@ def _level_table_cached(schedule: BarrierSchedule, max_levels: int,
         lat_rows.append([0.0] * width)
         bank_rows.append(list(range(width)))
 
-    return LevelTable(
+    return validate_tail_padding(LevelTable(
         group_sizes=jnp.asarray(sizes + [1] * pad, jnp.int32),
         latencies=jnp.asarray(lat_rows, jnp.float32),
         instr_cycles=jnp.asarray(instr + [0.0] * pad, jnp.float32),
         bank_ids=jnp.asarray(bank_rows, jnp.int32),
-    )
+    ))
 
 
 def level_table(schedule: BarrierSchedule, max_levels: int | None = None,
@@ -361,4 +405,9 @@ def stack_tables(schedules: Sequence[BarrierSchedule],
                 max(s.n_levels for s in schedules))
     tables = [level_table(s, depth, cfg, placement=p)
               for s, p in zip(schedules, placements)]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
+    # Each row was fully validated when level_table built it; the
+    # stacked check keeps only the cheap group-size suffix test (no
+    # host sync of the big stacked latency columns on the hot
+    # sweep-setup path).
+    return validate_tail_padding(
+        jax.tree.map(lambda *xs: jnp.stack(xs), *tables), full=False)

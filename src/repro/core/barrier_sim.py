@@ -16,36 +16,78 @@ machine model of :mod:`repro.core.topology`:
   wakeup unit raises the hardwired lines and all sleeping PEs resume
   from WFI simultaneously.
 
-Two implementations share the model:
+Three implementations share the model:
 
-* :func:`simulate` — the production path.  The schedule is encoded as a
-  fixed-shape, identity-padded :class:`~repro.core.barrier.LevelTable`
-  and the level walk is a single jitted ``lax.scan``: no Python control
-  flow, no shape-changing reshapes, so every power-of-two radix over
-  the same cluster reuses ONE compiled program (sweeps via
-  :mod:`repro.core.sweep` vmap it over whole radix x delay grids).
+* :func:`_telescope_core` — the production path (``core="telescope"``).
+  The schedule is encoded as a fixed-shape, identity-padded
+  :class:`~repro.core.barrier.LevelTable` and the level walk is a
+  statically unrolled *telescoping pyramid*: step ``i`` touches only
+  the first ``N / 2**i`` lanes.  Because every real level has group
+  size >= 2 and identity padding is tail-only (the canonicalized-table
+  invariant, :func:`repro.core.barrier.validate_tail_padding`), at most
+  ``N / 2**i`` survivors can be live entering step ``i`` — so the
+  per-level sort shrinks geometrically and total sort work drops from
+  ``O(N log N · log N)`` (full width at every level) to ``O(N log N)``
+  summed over levels.  All step shapes depend on ``N`` alone, never on
+  the schedule, so the one-compile property over schedule x placement
+  x delay grids is preserved.
+* :func:`_scan_core` — the previous production path (``core="scan"``),
+  a single jitted ``lax.scan`` at full width per level.  Kept as a
+  bit-for-bit oracle for the telescoped core and selectable everywhere
+  via ``core="scan"``.
 * :func:`simulate_reference` — the original per-level Python loop,
   kept verbatim as the equivalence oracle (tests/test_sweep.py asserts
-  the two agree bit-for-bit).
+  all implementations agree bit-for-bit).
 
 Everything is pure JAX and `vmap`-able over Monte-Carlo trials.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
+import os
+import warnings
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .barrier import BarrierSchedule, LevelTable, level_table
+from .barrier import (BarrierSchedule, LevelTable, level_table,
+                      validate_tail_padding)
 from .topology import DEFAULT, TeraPoolConfig
 
-# Incremented once per *trace* of the scanned core; jit caching means a
-# whole radix x delay x trial sweep costs a single increment.  Tests use
-# it to prove the one-compile property.
+
+@contextlib.contextmanager
+def quiet_donation():
+    """The jitted simulator entry points donate their arrival blocks
+    (memory-bound N=1024 grids reuse the buffer in place where the
+    backend supports it); CPU has no buffer donation and would emit an
+    advisory once per compile.  Wrap OUR dispatches in this scope so
+    the message is silenced for the library's own calls only — never
+    process-wide for unrelated user jits."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+# Incremented once per *trace* of a simulator core ("scan_core" /
+# "telescope_core"); jit caching means a whole radix x delay x trial
+# sweep costs a single increment.  Tests use it to prove the
+# one-compile property.
 TRACE_COUNTS = collections.Counter()
+
+# The selectable simulator cores.  "telescope" is the default hot
+# path; "scan" is retained as the bit-for-bit oracle (and escape
+# hatch, e.g. REPRO_BARRIER_CORE=scan).
+CORES = ("telescope", "scan")
+DEFAULT_CORE = os.environ.get("REPRO_BARRIER_CORE", "telescope")
+
+
+def core_traces() -> int:
+    """Total traces of ANY simulator core — the quantity the
+    one-compile tests bound, independent of which core is active."""
+    return sum(TRACE_COUNTS[c + "_core"] for c in CORES)
 
 
 class BarrierResult(NamedTuple):
@@ -176,30 +218,146 @@ def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
     )
 
 
-@partial(jax.jit, static_argnums=(2,))
+# ---------------------------------------------------------------------------
+# Telescoping pyramid core: statically unrolled shrinking-width steps.
+# ---------------------------------------------------------------------------
+
+def _telescope_core(arrivals: jnp.ndarray, table: LevelTable,
+                    cfg: TeraPoolConfig) -> BarrierResult:
+    """One barrier episode as a telescoping pyramid of unrolled steps.
+
+    Step ``i`` operates on only the first ``N / 2**i`` lanes.  The
+    bound is exact under the canonical-table invariant (identity
+    padding is tail-only, :func:`repro.core.barrier.
+    validate_tail_padding`): every real level divides the live count by
+    its group size ``g >= 2``, and once padding starts the single final
+    survivor trivially fits any later width.  Masked tail lanes inside
+    a step's window carry ``+inf`` exactly as in :func:`_scan_core`;
+    lanes beyond the window hold only ``+inf`` phantoms, which sort to
+    the back of their bank queues and never feed a live counter — so
+    dropping them changes no live lane's float trajectory and the two
+    cores agree bit for bit (tests/test_telescope.py).
+
+    Inside each step the two-pass ``jnp.lexsort((ready, bank))`` of the
+    scanned core becomes a single stable multi-key ``lax.sort`` over
+    ``(bank, ready)`` that co-sorts the group ids, and the per-bank
+    rank is derived with a ``searchsorted`` of the sorted bank column
+    into itself (first occurrence = segment start) instead of a second
+    ``cummax`` pass.  Only the max-plus service-start scan remains a
+    scan.
+
+    Step widths depend on ``N`` alone; group sizes, banks and latencies
+    are traced data — any schedule x placement combination over one
+    cluster shares this single compiled program, exactly like the
+    scanned core.
+    """
+    n = arrivals.shape[-1]
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    width = table.bank_ids.shape[-1]
+    depth = table.group_sizes.shape[-1]
+    svc = jnp.float32(cfg.bank_service_cycles)
+
+    TRACE_COUNTS["telescope_core"] += 1
+
+    # Level 0 entry: call, address computation, atomic issue.
+    ready = arrivals + cfg.instr_per_level
+    m = jnp.int32(n)
+    for i in range(depth):
+        w = max(1, n >> i)
+        ready = ready[:w]
+        idx = jnp.arange(w)
+        g = table.group_sizes[i]
+        grp = idx // g
+        # Masked tail slots can index past the counter columns; clip —
+        # their +inf ready times sort to the back of any bank queue
+        # they land in, so they never perturb live requests.
+        bank = table.bank_ids[i][jnp.minimum(grp, width - 1)]
+        b, a, gs = jax.lax.sort((bank, ready, grp), num_keys=2)
+        # Per-bank queues: the sorted bank column's first occurrence of
+        # each bank is its segment start, so rank = idx - first.
+        first = jnp.searchsorted(b, b, side="left")
+        rank = (idx - first).astype(jnp.float32)
+        is_start = jnp.concatenate(
+            [jnp.ones((1,), bool), b[1:] != b[:-1]])
+        start = _segmented_cummax(a - rank * svc, is_start) + rank * svc
+        # The counter's last arriver is its latest-serviced request; the
+        # fetched value travels back at the counter's access latency.
+        last = jax.ops.segment_max(start, gs, num_segments=w)
+        done = last + table.latencies[i][jnp.minimum(idx, width - 1)]
+        # Survivors run the compare/branch + counter-reset + next-level
+        # setup, then compact into the next (halved) window.
+        m = m // g
+        w_next = max(1, n >> (i + 1))
+        ready = jnp.where(jnp.arange(w_next) < m,
+                          done[:w_next] + table.instr_cycles[i], jnp.inf)
+
+    exit_time = ready[0] + cfg.wakeup_cycles
+    last_arrival = jnp.max(arrivals, axis=-1)
+    return BarrierResult(
+        exit_time=exit_time,
+        last_arrival=last_arrival,
+        span_cycles=exit_time - last_arrival,
+        mean_residency=jnp.mean(exit_time[..., None] - arrivals, axis=-1),
+    )
+
+
+_CORE_FNS = {"scan": _scan_core, "telescope": _telescope_core}
+
+
+def resolve_core(core: str | None = None) -> str:
+    """Normalize a core selector (``"telescope"`` | ``"scan"`` |
+    ``None`` for the session default) to a validated core name — the
+    static-argument form every jitted entry point shares."""
+    name = DEFAULT_CORE if core is None else core
+    if name not in _CORE_FNS:
+        raise ValueError(
+            f"unknown simulator core {name!r}; choose from {CORES}")
+    return name
+
+
+def core_fn(core: str | None = None):
+    """Resolve a core selector to its implementation."""
+    return _CORE_FNS[resolve_core(core)]
+
+
+@partial(jax.jit, static_argnums=(2, 3), donate_argnums=(0,))
 def _simulate_flat(arrivals: jnp.ndarray, table: LevelTable,
-                   cfg: TeraPoolConfig) -> BarrierResult:
-    """Jitted (trials, n_pes) batch of the scanned core."""
-    return jax.vmap(lambda a: _scan_core(a, table, cfg))(arrivals)
+                   cfg: TeraPoolConfig, core: str) -> BarrierResult:
+    """Jitted (trials, n_pes) batch of the selected core.  The arrival
+    block is donated: it is a flattened copy owned by
+    :func:`simulate_table`, so its buffer can be reused in place on
+    backends that support donation."""
+    fn = core_fn(core)
+    return jax.vmap(lambda a: fn(a, table, cfg))(arrivals)
 
 
 def simulate_table(arrivals: jnp.ndarray, table: LevelTable,
-                   cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
+                   cfg: TeraPoolConfig = DEFAULT, *,
+                   core: str | None = None) -> BarrierResult:
     """Simulate directly from a padded :class:`LevelTable`.
 
     Accepts any leading batch shape on ``arrivals``; all batch entries
-    run through one jitted, vmapped program.
+    run through one jitted, vmapped program.  ``core`` selects the
+    simulator implementation (default :data:`DEFAULT_CORE`).
     """
+    # Light check (group-size column only): tables from level_table /
+    # stack_tables were fully validated at construction; this guards
+    # hand-built tables without a per-call host sync of the big
+    # latency columns.
+    table = validate_tail_padding(table, full=False)
     arrivals = jnp.asarray(arrivals, jnp.float32)
     batch = arrivals.shape[:-1]
-    flat = arrivals.reshape((-1, arrivals.shape[-1]))
-    res = _simulate_flat(flat, table, cfg)
+    # jnp.copy guarantees _simulate_flat donates a private buffer, never
+    # the caller's array (asarray/reshape can alias their input).
+    flat = jnp.copy(arrivals.reshape((-1, arrivals.shape[-1])))
+    with quiet_donation():
+        res = _simulate_flat(flat, table, cfg, resolve_core(core))
     return BarrierResult(*(x.reshape(batch) for x in res))
 
 
 def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
              cfg: TeraPoolConfig = DEFAULT, *,
-             placement=None) -> BarrierResult:
+             placement=None, core: str | None = None) -> BarrierResult:
     """Simulate one barrier episode (or a leading batch of them).
 
     Args:
@@ -209,6 +367,8 @@ def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
       placement: optional :class:`~repro.core.placement.CounterPlacement`
         mapping every counter to a concrete bank; ``None`` uses the
         legacy span-heuristic latencies with conflict-free banks.
+      core: simulator implementation, ``"telescope"`` (default) or
+        ``"scan"`` (the bit-for-bit oracle core).
 
     Returns:
       :class:`BarrierResult` with the leading batch shape of ``arrivals``.
@@ -219,7 +379,7 @@ def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
             f"arrivals has {arrivals.shape[-1]} PEs, schedule expects "
             f"{schedule.n_pes}")
     table = level_table(schedule, cfg=cfg, placement=placement)
-    return simulate_table(arrivals, table, cfg)
+    return simulate_table(arrivals, table, cfg, core=core)
 
 
 def simulate_reference(arrivals: jnp.ndarray, schedule: BarrierSchedule,

@@ -55,7 +55,7 @@ import jax.numpy as jnp
 
 from . import barrier, barrier_sim
 from .barrier import LevelTable
-from .barrier_sim import _scan_core
+from .barrier_sim import core_fn
 from .topology import DEFAULT, TeraPoolConfig
 
 
@@ -238,20 +238,23 @@ def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
 
 
 @partial(jax.jit,
-         static_argnames=("n_epochs", "partial_groups", "n_pes", "cfg"))
+         static_argnames=("n_epochs", "partial_groups", "n_pes", "cfg",
+                          "core"))
 def _app_core(key: jax.Array, stage_table: LevelTable,
               global_table: LevelTable, epoch_work: jnp.ndarray,
               jitter: jnp.ndarray, mm_work: jnp.ndarray,
               mm_jitter: jnp.ndarray, *, n_epochs: int,
               partial_groups: int, n_pes: int,
-              cfg: TeraPoolConfig):
+              cfg: TeraPoolConfig, core: str):
     """Scanned epoch pipeline: one compile per sync mode.
 
     The epoch loop is a ``lax.scan`` over pre-split keys; the barrier
     radix lives in the (traced) level-table values, so sweeping it
     reuses the compiled program.  ``partial_groups`` shapes the reshape
-    and is the only mode-dependent static.
+    and — with the simulator ``core`` selector — is the only
+    mode-dependent static.
     """
+    sim = core_fn(core)
     keys = jax.random.split(key, n_epochs + 2)
     fft_pes = n_pes // partial_groups
 
@@ -260,11 +263,11 @@ def _app_core(key: jax.Array, stage_table: LevelTable,
         arr = _epoch_arrivals(k, t, epoch_work, jitter, n_pes)
         if partial_groups > 1:
             grp = arr.reshape(partial_groups, fft_pes)
-            res = jax.vmap(lambda a: _scan_core(a, stage_table, cfg))(grp)
+            res = jax.vmap(lambda a: sim(a, stage_table, cfg))(grp)
             t = jnp.repeat(res.exit_time, fft_pes)
             acc = acc + jnp.mean(res.mean_residency)
         else:
-            res = _scan_core(arr, stage_table, cfg)
+            res = sim(arr, stage_table, cfg)
             t = jnp.full((n_pes,), res.exit_time)
             acc = acc + res.mean_residency
         return (t, acc), None
@@ -274,20 +277,21 @@ def _app_core(key: jax.Array, stage_table: LevelTable,
     (t, sync_acc), _ = jax.lax.scan(epoch, (t, sync_acc), keys[:n_epochs])
 
     # FFT -> beamforming data dependency: one global barrier.
-    res = _scan_core(t, global_table, cfg)
+    res = sim(t, global_table, cfg)
     t = jnp.full((n_pes,), res.exit_time)
     sync_acc = sync_acc + res.mean_residency
 
     # Beamforming MATMUL: (N_B x N_RX) @ (N_RX x N_SC), column-wise over
     # all PEs; concurrent row reads -> moderate contention scatter.
     arr = _epoch_arrivals(keys[n_epochs], t, mm_work, mm_jitter, n_pes)
-    res = _scan_core(arr, global_table, cfg)
+    res = sim(arr, global_table, cfg)
     return res.exit_time, sync_acc + res.mean_residency
 
 
 def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                  sync: str = "partial", radix: int = 32,
-                 cfg: TeraPoolConfig = DEFAULT) -> FiveGResult:
+                 cfg: TeraPoolConfig = DEFAULT, *,
+                 core: str | None = None) -> FiveGResult:
     """Simulate the full OFDM + beamforming pipeline under one barrier
     strategy.  ``sync`` in {"central", "tree", "partial", "tuned",
     "tuned_partial", "placed", "workload"}; ``radix`` is ignored by the
@@ -295,6 +299,8 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     ``placed``/``workload`` the counter->bank mapping too — comes from
     the mixed-radix tuner; ``workload`` additionally tunes the stage
     and global barriers SEPARATELY on their own epoch arrival models).
+    ``core`` selects the simulator implementation for every barrier of
+    every mode (telescope default; see :mod:`repro.core.barrier_sim`).
 
     The ~25-epoch pipeline runs as one jitted ``lax.scan``; changing the
     radix — or swapping in any tuned schedule or placement of the same
@@ -317,7 +323,8 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         key, stage_table, global_table, jnp.float32(epoch_work),
         jnp.float32(jitter), jnp.float32(app.mm_work(n)),
         jnp.float32(app.mm_jitter(n)), n_epochs=n_epochs,
-        partial_groups=partial_groups, n_pes=n, cfg=cfg)
+        partial_groups=partial_groups, n_pes=n, cfg=cfg,
+        core=barrier_sim.resolve_core(core))
 
     # Serial single-core reference (no barriers, same per-PE work model).
     fft_work = app.n_rx * app.n_stages * app.fft_pes * app.stage_cycles
@@ -403,7 +410,8 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
 def compare_barriers(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                      radix: int = 32,
                      cfg: TeraPoolConfig = DEFAULT,
-                     modes: tuple = ("central", "tree", "partial")) -> dict:
+                     modes: tuple = ("central", "tree", "partial"), *,
+                     core: str | None = None) -> dict:
     """Fig. 7 comparison; returns per-strategy results + per-mode
     speedups over the central-counter baseline.  Pass ``modes``
     including ``"tuned"`` / ``"tuned_partial"`` / ``"placed"`` /
@@ -414,7 +422,8 @@ def compare_barriers(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         raise ValueError("modes must include the 'central' baseline")
     out = {}
     for mode in modes:
-        out[mode] = simulate_app(key, app, sync=mode, radix=radix, cfg=cfg)
+        out[mode] = simulate_app(key, app, sync=mode, radix=radix, cfg=cfg,
+                                 core=core)
     base = out["central"].total_cycles
     for mode in modes:
         if mode != "central":

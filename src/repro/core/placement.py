@@ -36,9 +36,12 @@ tunable design axis:
   (tests/test_placement.py).
 
 Sibling counters mapped to one bank *contend*: their atomics enter the
-same single-ported service queue, so the scanned core serializes
+same single-ported service queue, so both simulator cores serialize
 requests per bank rather than per counter (see
-:func:`repro.core.barrier_sim._scan_core`).
+:func:`repro.core.barrier_sim._telescope_core`, the shrinking-width
+production core, and :func:`repro.core.barrier_sim._scan_core`, its
+full-width oracle — the per-bank-queue semantics are identical and
+both are validated against :func:`simulate_placed_reference`).
 """
 from __future__ import annotations
 

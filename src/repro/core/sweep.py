@@ -27,18 +27,32 @@ Entry points:
 * :func:`simulate_schedules` / :func:`simulate_radices` — fixed
   arrivals (e.g. one kernel's epoch, Fig. 6) swept across a schedule
   stack in one call.
+
+Every entry point takes a ``core`` selector (``"telescope"`` — the
+default shrinking-width pyramid — or ``"scan"``, the full-width oracle
+core; see :mod:`repro.core.barrier_sim`), a ``trial_chunk`` knob that
+splits the Monte-Carlo trial axis into bounded-memory chunks
+(bit-for-bit identical to the unchunked grid — trials are
+independent), and donates its internally built arrival blocks to the
+jitted grids so big sweeps stop being memory-bound on backends with
+buffer donation.  When more than one JAX device is visible and the
+schedule axis divides evenly, the grids are sharded across devices
+over the schedule axis with ``shard_map`` (transparent single-device
+fallback — same compiled math, same results).
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from . import barrier
+from . import barrier, barrier_sim
 from .barrier import LevelTable
-from .barrier_sim import BarrierResult, _scan_core
+from .barrier_sim import BarrierResult, core_fn
 from .topology import DEFAULT, TeraPoolConfig
 
 
@@ -142,20 +156,98 @@ def radix_tables(radices: Sequence[int], n_pes: int | None = None,
     return barrier.stack_tables(scheds, cfg)
 
 
-@partial(jax.jit, static_argnums=(3,))
-def _sweep_grid(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
-                cfg: TeraPoolConfig) -> BarrierResult:
-    """(R, D, T) grid through one compiled program.
+def _sweep_body(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
+                cfg: TeraPoolConfig, core: str) -> BarrierResult:
+    """(R, D, T) grid body (unjitted — shared by the plain jit and the
+    sharded path).
 
     ``unit`` is a (T, n_pes) block of standard uniforms; scaling by each
     delay reproduces ``uniform_arrivals`` for that delay exactly.
     """
+    fn = core_fn(core)
     arrivals = delays[:, None, None] * unit[None, :, :]      # (D, T, N)
-    per_trial = jax.vmap(lambda tab, a: _scan_core(a, tab, cfg),
+    per_trial = jax.vmap(lambda tab, a: fn(a, tab, cfg),
                          in_axes=(None, 0))                  # over T
     per_delay = jax.vmap(per_trial, in_axes=(None, 0))       # over D
     per_radix = jax.vmap(per_delay, in_axes=(0, None))       # over R
     return per_radix(tables, arrivals)
+
+
+# ``unit`` / ``arrivals`` blocks are built (or sliced) fresh by the
+# sweep entry points, so the jitted grids donate them: on backends with
+# buffer donation the N=1024 512-composition grids reuse the arrival
+# block in place instead of holding input + output live (CPU ignores
+# donation; results are identical either way).
+@partial(jax.jit, static_argnums=(3, 4), donate_argnums=(2,))
+def _sweep_grid(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
+                cfg: TeraPoolConfig, core: str) -> BarrierResult:
+    """(R, D, T) grid through one compiled program."""
+    return _sweep_body(tables, delays, unit, cfg, core)
+
+
+# ---------------------------------------------------------------------------
+# Device sharding over the schedule axis.
+# ---------------------------------------------------------------------------
+
+def _grid_devices(n_sched: int, shard: bool):
+    """The device tuple to shard the schedule axis over, or ``None``
+    for the plain single-device path (one device, indivisible stack, or
+    sharding disabled)."""
+    if not shard:
+        return None
+    devs = jax.devices()
+    if len(devs) <= 1 or n_sched % len(devs) != 0:
+        return None
+    return tuple(devs)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_grid(devices: tuple, body: str, cfg: TeraPoolConfig,
+                  core: str):
+    """Jitted ``shard_map`` of a grid body over a 1-D schedule-axis
+    mesh, cached per (devices, body, cfg, core) so repeated sweeps
+    reuse one compiled program per shape (the one-compile property now
+    holds per device topology)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.asarray(devices), ("sched",))
+    fn = {"sweep": _sweep_body, "arrival": _arrival_body}[body]
+    mapped = shard_map(partial(fn, cfg=cfg, core=core), mesh=mesh,
+                       in_specs=(P("sched"), P(), P()),
+                       out_specs=P("sched"))
+    return jax.jit(mapped, donate_argnums=(2,))
+
+
+def _dispatch_grid(body: str, tables: LevelTable, fixed: jnp.ndarray,
+                   block: jnp.ndarray, cfg: TeraPoolConfig, core: str,
+                   shard: bool) -> BarrierResult:
+    """Run one grid chunk: sharded over the schedule axis when several
+    devices divide it, plain jit otherwise."""
+    devices = _grid_devices(tables.group_sizes.shape[0], shard)
+    with barrier_sim.quiet_donation():
+        if devices is None:
+            grid = {"sweep": _sweep_grid, "arrival": _arrival_grid}[body]
+            return grid(tables, fixed, block, cfg, core)
+        return _sharded_grid(devices, body, cfg, core)(tables, fixed,
+                                                       block)
+
+
+def _trial_chunks(n_trials: int, trial_chunk: int | None):
+    """(lo, hi) slices of the trial axis; one full slice when unset."""
+    if trial_chunk is None or trial_chunk >= n_trials:
+        yield 0, n_trials
+        return
+    if trial_chunk < 1:
+        raise ValueError(f"trial_chunk must be >= 1, got {trial_chunk}")
+    for lo in range(0, n_trials, trial_chunk):
+        yield lo, min(lo + trial_chunk, n_trials)
+
+
+def _concat_results(parts: list) -> BarrierResult:
+    if len(parts) == 1:
+        return parts[0]
+    return BarrierResult(*(jnp.concatenate(xs, axis=-1)
+                           for xs in zip(*parts)))
 
 
 def sweep_schedules(key: jax.Array,
@@ -163,7 +255,10 @@ def sweep_schedules(key: jax.Array,
                     delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
                     n_trials: int = 16,
                     cfg: TeraPoolConfig = DEFAULT,
-                    placements: Sequence | None = None) -> SweepResult:
+                    placements: Sequence | None = None, *,
+                    core: str | None = None,
+                    trial_chunk: int | None = None,
+                    shard: bool = True) -> SweepResult:
     """Run ANY same-``n_pes`` schedule stack x delay x trial grid in one
     compiled call — uniform radices, mixed-radix compositions and
     counter placements alike flow through the same jitted program.
@@ -171,13 +266,21 @@ def sweep_schedules(key: jax.Array,
     ``placements`` aligns with ``schedules`` (``None`` entries fall
     back to the span heuristic); placed and unplaced points share one
     table shape, so adding the placement axis costs zero extra
-    compiles."""
+    compiles.  ``core`` selects the simulator implementation
+    (telescope/scan); ``trial_chunk`` bounds the live grid memory by
+    splitting the trial axis (chunked == unchunked bit-for-bit; the
+    trial draws happen once, up front); ``shard`` allows splitting the
+    schedule axis across visible devices."""
     schedules = tuple(schedules)
     tables = barrier.stack_tables(schedules, cfg, placements)
     n = schedules[0].n_pes
     unit = jax.random.uniform(key, (n_trials, n), jnp.float32, 0.0, 1.0)
     d = jnp.asarray(delays, jnp.float32)
-    res = _sweep_grid(tables, d, unit, cfg)
+    core = barrier_sim.resolve_core(core)
+    res = _concat_results([
+        _dispatch_grid("sweep", tables, d, jnp.copy(unit[lo:hi]), cfg,
+                       core, shard)
+        for lo, hi in _trial_chunks(n_trials, trial_chunk)])
     # Placement-free sweeps keep the documented empty tuple (consumers
     # treat () and all-None alike via ``res.placements or ...``).
     placements = tuple(placements) if placements is not None else ()
@@ -188,33 +291,52 @@ def sweep_schedules(key: jax.Array,
 def sweep_barrier(key: jax.Array, radices: Sequence[int] | None = None,
                   delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
                   n_pes: int | None = None, n_trials: int = 16,
-                  cfg: TeraPoolConfig = DEFAULT) -> SweepResult:
+                  cfg: TeraPoolConfig = DEFAULT, *,
+                  core: str | None = None,
+                  trial_chunk: int | None = None,
+                  shard: bool = True) -> SweepResult:
     """The Fig. 4 grid: :func:`sweep_schedules` over the uniform-radix
     stack."""
     n = int(n_pes if n_pes is not None else cfg.n_pes)
     if radices is None:
         radices = barrier.all_radices(n, cfg)
     scheds = [barrier.kary_tree(r, n_pes=n, cfg=cfg) for r in radices]
-    return sweep_schedules(key, scheds, delays, n_trials, cfg)
+    return sweep_schedules(key, scheds, delays, n_trials, cfg, core=core,
+                           trial_chunk=trial_chunk, shard=shard)
 
 
-@partial(jax.jit, static_argnums=(2,))
-def _arrival_grid(tables: LevelTable, arrivals: jnp.ndarray,
-                  cfg: TeraPoolConfig) -> BarrierResult:
-    """(S, K, T) grid of data-dependent arrivals through one compile."""
-    per_trial = jax.vmap(lambda tab, a: _scan_core(a, tab, cfg),
+def _arrival_body(tables: LevelTable, _unused: jnp.ndarray,
+                  arrivals: jnp.ndarray, cfg: TeraPoolConfig,
+                  core: str) -> BarrierResult:
+    """(S, K, T) grid body of data-dependent arrivals (unjitted —
+    shared by the plain jit and the sharded path; ``_unused`` keeps the
+    (tables, fixed, block) grid calling convention so both bodies share
+    one dispatcher)."""
+    fn = core_fn(core)
+    per_trial = jax.vmap(lambda tab, a: fn(a, tab, cfg),
                          in_axes=(None, 0))                  # over T
     per_kernel = jax.vmap(per_trial, in_axes=(None, 0))      # over K
     per_sched = jax.vmap(per_kernel, in_axes=(0, None))      # over S
     return per_sched(tables, arrivals)
 
 
+@partial(jax.jit, static_argnums=(3, 4), donate_argnums=(2,))
+def _arrival_grid(tables: LevelTable, _unused: jnp.ndarray,
+                  arrivals: jnp.ndarray, cfg: TeraPoolConfig,
+                  core: str) -> BarrierResult:
+    """(S, K, T) grid of data-dependent arrivals through one compile,
+    donating the arrival block (built fresh by :func:`sweep_arrivals`)."""
+    return _arrival_body(tables, _unused, arrivals, cfg, core)
+
+
 def sweep_arrivals(arrivals: jnp.ndarray,
                    schedules: Sequence[barrier.BarrierSchedule],
                    cfg: TeraPoolConfig = DEFAULT,
                    placements: Sequence | None = None,
-                   kernels: Sequence[str] | None = None
-                   ) -> ArrivalSweepResult:
+                   kernels: Sequence[str] | None = None, *,
+                   core: str | None = None,
+                   trial_chunk: int | None = None,
+                   shard: bool = True) -> ArrivalSweepResult:
     """Sweep a stack of MEASURED arrival matrices across a schedule
     (x optional placement) stack in one compiled call.
 
@@ -224,9 +346,10 @@ def sweep_arrivals(arrivals: jnp.ndarray,
     :func:`sweep_schedules`, whose grid is synthesized from uniform
     delays inside the jit, the arrivals here are *data*: any kernel's
     measured scatter (atomic-reduction tails, bimodal border imbalance,
-    ...) flows through the same single compiled scanned core, so the
+    ...) flows through the same single compiled simulator core, so the
     whole kernel x schedule x placement x trial grid costs one compile
-    (trace-count test in tests/test_workload_tuning.py).
+    (trace-count test in tests/test_workload_tuning.py).  ``core`` /
+    ``trial_chunk`` / ``shard`` behave as in :func:`sweep_schedules`.
     """
     arrivals = jnp.asarray(arrivals, jnp.float32)
     if arrivals.ndim == 2:
@@ -245,7 +368,13 @@ def sweep_arrivals(arrivals: jnp.ndarray,
             f"{arrivals.shape[0]} arrival stacks but {len(kernels)} "
             f"kernel names")
     tables = barrier.stack_tables(schedules, cfg, placements)
-    res = _arrival_grid(tables, arrivals, cfg)
+    core = barrier_sim.resolve_core(core)
+    n_trials = arrivals.shape[1]
+    fixed = jnp.zeros((0,), jnp.float32)   # no delay axis for this body
+    res = _concat_results([
+        _dispatch_grid("arrival", tables, fixed,
+                       jnp.copy(arrivals[:, lo:hi]), cfg, core, shard)
+        for lo, hi in _trial_chunks(n_trials, trial_chunk)])
     kernels = (tuple(kernels) if kernels is not None
                else tuple(f"workload{i}" for i in range(arrivals.shape[0])))
     placements = tuple(placements) if placements is not None else ()
@@ -253,16 +382,18 @@ def sweep_arrivals(arrivals: jnp.ndarray,
                               placements=placements, **res._asdict())
 
 
-@partial(jax.jit, static_argnums=(2,))
+@partial(jax.jit, static_argnums=(2, 3))
 def _schedule_stack(tables: LevelTable, arrivals: jnp.ndarray,
-                    cfg: TeraPoolConfig) -> BarrierResult:
-    return jax.vmap(lambda tab: _scan_core(arrivals, tab, cfg))(tables)
+                    cfg: TeraPoolConfig, core: str) -> BarrierResult:
+    fn = core_fn(core)
+    return jax.vmap(lambda tab: fn(arrivals, tab, cfg))(tables)
 
 
 def simulate_schedules(arrivals: jnp.ndarray,
                        schedules: Sequence[barrier.BarrierSchedule],
                        cfg: TeraPoolConfig = DEFAULT,
-                       placements: Sequence | None = None) -> BarrierResult:
+                       placements: Sequence | None = None, *,
+                       core: str | None = None) -> BarrierResult:
     """Simulate ONE arrival vector under every schedule (x optional
     per-entry placement) in the stack, vmapped through one compile."""
     arrivals = jnp.asarray(arrivals, jnp.float32)
@@ -272,19 +403,36 @@ def simulate_schedules(arrivals: jnp.ndarray,
             f"arrivals has {arrivals.shape[-1]} PEs, schedules expect "
             f"{schedules[0].n_pes}")
     tables = barrier.stack_tables(schedules, cfg, placements)
-    return _schedule_stack(tables, arrivals, cfg)
+    return _schedule_stack(tables, arrivals, cfg,
+                           barrier_sim.resolve_core(core))
 
 
 def simulate_radices(arrivals: jnp.ndarray, radices: Sequence[int],
-                     cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
+                     cfg: TeraPoolConfig = DEFAULT, *,
+                     core: str | None = None) -> BarrierResult:
     """Simulate ONE arrival vector under every radix in ``radices``
     (Fig. 6's per-kernel radix scan), vmapped through one compile."""
     arrivals = jnp.asarray(arrivals, jnp.float32)
     scheds = [barrier.kary_tree(r, n_pes=arrivals.shape[-1], cfg=cfg)
               for r in radices]
-    return simulate_schedules(arrivals, scheds, cfg)
+    return simulate_schedules(arrivals, scheds, cfg, core=core)
 
 
 def best_radix_per_delay(res: SweepResult) -> jnp.ndarray:
-    """(D,) radix minimizing the mean Fig. 4a span at each delay."""
+    """(D,) radix minimizing the mean Fig. 4a span at each delay.
+
+    Only meaningful for uniform-radix stacks: mixed-radix compositions
+    report radix 0.  Prefer :func:`best_schedule_per_delay` for
+    arbitrary schedule stacks."""
     return res.radices[jnp.argmin(res.mean_span, axis=0)]
+
+
+def best_schedule_per_delay(res: SweepResult) -> tuple:
+    """(D,) canonical schedule names (``"8x16x8"``,
+    ``"2x8x8x8@central"``, ...) minimizing the mean Fig. 4a span at each
+    delay — the mixed-radix-safe sibling of :func:`best_radix_per_delay`
+    (whose ``radix == 0`` placeholder is meaningless for mixed
+    stacks)."""
+    names = res.names
+    return tuple(names[int(i)]
+                 for i in jnp.argmin(res.mean_span, axis=0))

@@ -139,8 +139,10 @@ def tune_barrier(key, n_pes: int | None = None,
                  n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT, *,
                  prune: str = "none",
                  schedules: Sequence[BarrierSchedule] | None = None,
-                 placements: Sequence[str] | None = None
-                 ) -> sweep.SweepResult:
+                 placements: Sequence[str] | None = None,
+                 core: str | None = None,
+                 trial_chunk: int | None = None,
+                 shard: bool = True) -> sweep.SweepResult:
     """Sweep the full mixed-radix design space in ONE compiled call.
 
     Every composition shares the padded level-table shape, so the whole
@@ -155,12 +157,18 @@ def tune_barrier(key, n_pes: int | None = None,
     strategy (the result's ``schedules``/``placements`` tuples align
     entry-for-entry), still through the single compiled core.  ``None``
     keeps the placement-free legacy sweep.
+
+    ``core`` / ``trial_chunk`` / ``shard`` pass through to
+    :func:`repro.core.sweep.sweep_schedules`: simulator-core selection,
+    bounded-memory trial chunking (bit-for-bit identical), and
+    schedule-axis device sharding.
     """
     if schedules is None:
         schedules = all_schedules(n_pes, cfg, prune=prune)
     scheds, placs = _cross_placements(schedules, placements, cfg)
     return sweep.sweep_schedules(key, scheds, delays, n_trials, cfg,
-                                 placements=placs)
+                                 placements=placs, core=core,
+                                 trial_chunk=trial_chunk, shard=shard)
 
 
 def _cross_placements(schedules: Sequence[BarrierSchedule],
@@ -259,13 +267,13 @@ def pareto_schedules(res: sweep.SweepResult) -> List[BarrierSchedule]:
 
 def best_schedule(key, n_pes: int | None = None, delay: float = 0.0,
                   n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT, *,
-                  prune: str = "none", partial: bool = False
-                  ) -> BarrierSchedule:
+                  prune: str = "none", partial: bool = False,
+                  core: str | None = None) -> BarrierSchedule:
     """Convenience: the single tuned schedule for one arrival scatter
     (used by the 5G ``sync="tuned"`` modes)."""
     schedules = all_schedules(n_pes, cfg, prune=prune, partial=partial)
     res = tune_barrier(key, n_pes, delays=(delay,), n_trials=n_trials,
-                       cfg=cfg, schedules=schedules)
+                       cfg=cfg, schedules=schedules, core=core)
     i = int(jnp.argmin(jnp.mean(res.span_cycles, axis=-1)[:, 0]))
     return schedules[i]
 
@@ -274,7 +282,8 @@ def best_placed_schedule(key, n_pes: int | None = None, delay: float = 0.0,
                          n_trials: int = 16,
                          cfg: TeraPoolConfig = DEFAULT, *,
                          prune: str = "none", partial: bool = False,
-                         placements: Sequence[str] = placement_mod.STRATEGIES
+                         placements: Sequence[str] = placement_mod.STRATEGIES,
+                         core: str | None = None
                          ) -> Tuple[BarrierSchedule, CounterPlacement]:
     """The jointly tuned (schedule, placement) pair for one arrival
     scatter: composition x strategy through one compiled sweep (used by
@@ -283,7 +292,8 @@ def best_placed_schedule(key, n_pes: int | None = None, delay: float = 0.0,
     placement-free tuned schedule on the tuning draws."""
     schedules = all_schedules(n_pes, cfg, prune=prune, partial=partial)
     res = tune_barrier(key, n_pes, delays=(delay,), n_trials=n_trials,
-                       cfg=cfg, schedules=schedules, placements=placements)
+                       cfg=cfg, schedules=schedules, placements=placements,
+                       core=core)
     i = int(jnp.argmin(jnp.mean(res.span_cycles, axis=-1)[:, 0]))
     return res.schedules[i], res.placements[i]
 
@@ -310,8 +320,10 @@ def sweep_workloads(key, kernels: Sequence[str] | None = None,
                     cfg: TeraPoolConfig = DEFAULT, *,
                     prune: str = "none",
                     schedules: Sequence[BarrierSchedule] | None = None,
-                    placements: Sequence[str] | None = None
-                    ) -> sweep.ArrivalSweepResult:
+                    placements: Sequence[str] | None = None,
+                    core: str | None = None,
+                    trial_chunk: int | None = None,
+                    shard: bool = True) -> sweep.ArrivalSweepResult:
     """Sweep every kernel's MEASURED arrival distribution across the
     schedule (x placement) stack in one compiled call.
 
@@ -338,7 +350,8 @@ def sweep_workloads(key, kernels: Sequence[str] | None = None,
         schedules = all_schedules(n, cfg, prune=prune)
     scheds, placs = _cross_placements(schedules, placements, cfg)
     return sweep.sweep_arrivals(arrivals, scheds, cfg, placements=placs,
-                                kernels=kernels)
+                                kernels=kernels, core=core,
+                                trial_chunk=trial_chunk, shard=shard)
 
 
 def best_per_kernel(res: sweep.ArrivalSweepResult) -> List[WorkloadPoint]:
@@ -363,8 +376,8 @@ def best_per_kernel(res: sweep.ArrivalSweepResult) -> List[WorkloadPoint]:
 def tune_for_workload(key, kernel: str, n_pes: int | None = None,
                       n_trials: int = 8, cfg: TeraPoolConfig = DEFAULT, *,
                       prune: str = "none",
-                      placements: Sequence[str] | None = None
-                      ) -> WorkloadPoint:
+                      placements: Sequence[str] | None = None,
+                      core: str | None = None) -> WorkloadPoint:
     """Tune one kernel: its measured arrival batch through the full
     schedule (x placement) stack, argmin by mean span.
 
@@ -375,14 +388,15 @@ def tune_for_workload(key, kernel: str, n_pes: int | None = None,
     evaluated on this kernel's own arrivals — the acceptance bar of
     tests/test_workload_tuning.py."""
     res = sweep_workloads(key, (kernel,), n_pes, n_trials, cfg,
-                          prune=prune, placements=placements)
+                          prune=prune, placements=placements, core=core)
     return best_per_kernel(res)[0]
 
 
 def tune_for_arrivals(arrivals, cfg: TeraPoolConfig = DEFAULT, *,
                       prune: str = "none", partial: bool = False,
                       schedules: Sequence[BarrierSchedule] | None = None,
-                      placements: Sequence[str] | None = None
+                      placements: Sequence[str] | None = None,
+                      core: str | None = None
                       ) -> Tuple[BarrierSchedule, CounterPlacement | None,
                                  float]:
     """The winning (schedule, placement, mean_span) for an EXPLICIT
@@ -400,7 +414,8 @@ def tune_for_arrivals(arrivals, cfg: TeraPoolConfig = DEFAULT, *,
     if schedules is None:
         schedules = all_schedules(n, cfg, prune=prune, partial=partial)
     scheds, placs = _cross_placements(schedules, placements, cfg)
-    res = sweep.sweep_arrivals(arrivals, scheds, cfg, placements=placs)
+    res = sweep.sweep_arrivals(arrivals, scheds, cfg, placements=placs,
+                               core=core)
     spans = jnp.mean(res.span_cycles, axis=-1)[:, 0]
     i = int(jnp.argmin(spans))
     plc = res.placements[i] if res.placements else None

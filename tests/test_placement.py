@@ -159,7 +159,7 @@ def test_composition_placement_delay_grid_compiles_once():
     # 128 compositions x 4 strategies, aligned metadata.
     assert res.span_cycles.shape == (512, 4, 4)
     assert len(res.placements) == 512
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+    assert barrier_sim.core_traces() == 1
 
 
 def test_full_placed_tuner_sweep_1024_compiles_once():
@@ -174,7 +174,7 @@ def test_full_placed_tuner_sweep_1024_compiles_once():
                               placements=placement.STRATEGIES)
     jax.block_until_ready(res.span_cycles)
     assert res.span_cycles.shape == (2048, 4, 2)
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+    assert barrier_sim.core_traces() == 1
     for p in tuning.best_per_delay(res):
         assert p.mean_span <= p.uniform_span, (p.delay, p.schedule.name)
         # the jointly placed winner carries its placement metadata

@@ -116,7 +116,7 @@ def test_full_fig4a_grid_compiles_once():
         n_trials=16)
     jax.block_until_ready(res.span_cycles)
     assert res.span_cycles.shape == (10, 4, 16)
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+    assert barrier_sim.core_traces() == 1
 
     # A second call with different trace-compatible inputs reuses the
     # compiled program: no new traces at all.
@@ -124,7 +124,7 @@ def test_full_fig4a_grid_compiles_once():
         jax.random.PRNGKey(7), delays=(64.0, 256.0, 1024.0, 4096.0),
         n_trials=16)
     jax.block_until_ready(res2.span_cycles)
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+    assert barrier_sim.core_traces() == 1
 
 
 def test_simulate_radices_matches_oracle():
@@ -170,4 +170,4 @@ def test_app_radix_sweep_does_not_retrace():
     barrier_sim.TRACE_COUNTS.clear()
     for radix in (2, 8, 64, 256):
         fiveg.simulate_app(key, app, sync="tree", radix=radix)
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 0
+    assert barrier_sim.core_traces() == 0

@@ -135,7 +135,7 @@ def test_full_tuner_sweep_compiles_once_and_beats_uniform():
                               n_trials=4)
     jax.block_until_ready(res.span_cycles)
     assert res.span_cycles.shape == (512, 4, 4)
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+    assert barrier_sim.core_traces() == 1
 
     for p in tuning.best_per_delay(res):
         assert p.mean_span <= p.uniform_span, (p.delay, p.schedule.name)
@@ -146,7 +146,7 @@ def test_full_tuner_sweep_compiles_once_and_beats_uniform():
     assert res2.span_cycles.shape == (128, 4, 4)
     # pruned stack has a different leading dim -> one extra trace, not
     # one per schedule
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 2
+    assert barrier_sim.core_traces() == 2
 
 
 def test_best_per_delay_and_pareto():

@@ -75,14 +75,14 @@ def test_workload_sweep_compiles_once_n256():
     # 32 hierarchy compositions x 4 strategies, 15 kernels, 2 trials.
     assert res.span_cycles.shape == (128, 15, 2)
     assert res.kernels == workloads.FIG6_KERNELS
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+    assert barrier_sim.core_traces() == 1
 
     # A second sweep with different arrivals reuses the compile.
     res2 = tuning.sweep_workloads(jax.random.PRNGKey(10), n_pes=256,
                                   n_trials=2, prune="hierarchy",
                                   placements=placement.STRATEGIES)
     jax.block_until_ready(res2.span_cycles)
-    assert barrier_sim.TRACE_COUNTS["scan_core"] == 1
+    assert barrier_sim.core_traces() == 1
 
 
 # ---------------------------------------------------------------------------
