@@ -1,0 +1,105 @@
+"""Resilience benchmark: what durability costs, and how fast a killed
+sweep comes back.
+
+Two questions, measured on the tuner grid (hierarchy-pruned
+compositions at N>256 so the acceptance run at N=1024 matches how the
+tuner is actually driven at that scale):
+
+* **Checkpoint overhead** — steady-state wall time of the resilient
+  chunk loop (:func:`repro.runtime.resilient_sweep_schedules`, fresh
+  store every call, so every chunk is computed AND checkpointed) vs the
+  plain chunked engine (:func:`repro.core.sweep.sweep_schedules` at the
+  same ``trial_chunk``), across chunk sizes including the default.  The
+  acceptance bar is <= 10% at N=1024 at ``DEFAULT_TRIAL_CHUNK``.
+* **Recovery latency** — a run killed by an injected
+  :class:`~repro.runtime.inject.Preemption` mid-grid, then resumed:
+  the resumed call's wall time and how many chunks it restored vs
+  recomputed.
+
+Environment knobs (CI smoke shrinks the cluster):
+  * ``REPRO_BENCH_RESILIENCE_N`` — cluster size (default ``1024``).
+"""
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+
+from repro.core import sweep, tuning
+from repro.runtime import (FaultPlan, Preemption, ResilienceConfig,
+                           SimulatedFault, resilient_sweep_schedules)
+from repro.runtime.resilient_sweep import DEFAULT_TRIAL_CHUNK
+
+from . import timing
+
+KEY = jax.random.PRNGKey(0)
+DELAYS = (0.0, 512.0)
+N = int(os.environ.get("REPRO_BENCH_RESILIENCE_N", "1024"))
+N_TRIALS = 16
+CHUNKS = tuple(sorted({4, DEFAULT_TRIAL_CHUNK, 16}))
+
+
+def run():
+    rows = []
+    prune = "hierarchy" if N > 256 else "none"
+    scheds = tuning.all_schedules(N, prune=prune)
+    root = Path(tempfile.mkdtemp(prefix="bench_resilience_"))
+    try:
+        for chunk in CHUNKS:
+            _, plain_us, plain_compile = timing.measure(
+                lambda: sweep.sweep_schedules(
+                    KEY, scheds, DELAYS, N_TRIALS,
+                    trial_chunk=chunk).span_cycles,
+                warmup=0, iters=2)
+
+            def resilient():
+                # wipe the store: every timed call computes (and
+                # checkpoints) every chunk, never resumes
+                d = root / f"chunk{chunk}"
+                shutil.rmtree(d, ignore_errors=True)
+                rc = ResilienceConfig(ckpt_dir=str(d), trial_chunk=chunk)
+                return resilient_sweep_schedules(
+                    KEY, scheds, DELAYS, N_TRIALS,
+                    resilience=rc).result.span_cycles
+
+            _, res_us, res_compile = timing.measure(
+                resilient, warmup=0, iters=2)
+            overhead = 100.0 * (res_us - plain_us) / plain_us
+            rows.append((f"resilience_plain_N{N}_c{chunk}", plain_us,
+                         f"{len(scheds)}sched", plain_compile))
+            rows.append((f"resilience_ckpt_N{N}_c{chunk}", res_us,
+                         f"overhead={overhead:.1f}%", res_compile))
+
+        # Recovery latency: kill mid-grid, then time the resumed call.
+        chunk = DEFAULT_TRIAL_CHUNK
+        n_chunks = -(-N_TRIALS // chunk)
+        kill_at = n_chunks // 2
+        d = root / "recovery"
+        rc = ResilienceConfig(ckpt_dir=str(d), trial_chunk=chunk)
+        plan = FaultPlan(faults={kill_at: Preemption()})
+        t0 = time.perf_counter()
+        try:
+            resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                      resilience=rc, fault_plan=plan)
+        except SimulatedFault:
+            pass
+        kill_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        rep = resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                        resilience=rc, fault_plan=plan)
+        resume_us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"resilience_killed_N{N}", kill_us,
+                     f"killed@chunk{kill_at}", 0.0))
+        rows.append((f"resilience_recovery_N{N}", resume_us,
+                     f"resumed{rep.chunks_resumed}/{rep.chunks_total}",
+                     0.0))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

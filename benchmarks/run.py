@@ -9,10 +9,10 @@ import sys
 
 
 def main() -> None:
-    from . import (bench_core, collectives_bench, fig4_random_delay,
-                   fig5_kernel_cdf, fig6_kernel_colormap, fig7_5g_app,
-                   fig_placement, fig_tuned_tree, fig_workload_tuned,
-                   roofline_table)
+    from . import (bench_core, bench_resilience, collectives_bench,
+                   fig4_random_delay, fig5_kernel_cdf,
+                   fig6_kernel_colormap, fig7_5g_app, fig_placement,
+                   fig_tuned_tree, fig_workload_tuned, roofline_table)
     mods = [("fig4", fig4_random_delay), ("fig5", fig5_kernel_cdf),
             ("fig6", fig6_kernel_colormap), ("fig7", fig7_5g_app),
             ("tuned", fig_tuned_tree),
@@ -20,6 +20,7 @@ def main() -> None:
             ("workload", fig_workload_tuned),
             ("core", bench_core),
             ("collectives", collectives_bench),
+            ("resilience", bench_resilience),
             ("roofline", roofline_table)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived,compile_us")

@@ -69,6 +69,18 @@ def save(ckpt_dir: str | Path, step: int, tree: Any, *,
     return tmp
 
 
+def _manifest_ok(step_dir: Path) -> bool:
+    """A checkpoint directory counts only if its manifest parses and
+    names a step — a crash between file creation and write (or a
+    torn/truncated write on a non-atomic filesystem) must make the
+    directory invisible to resume, not crash it."""
+    try:
+        manifest = json.loads((step_dir / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+        return False
+    return isinstance(manifest, dict) and "step" in manifest
+
+
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:
     root = Path(ckpt_dir)
     if not root.exists():
@@ -77,7 +89,7 @@ def latest_step(ckpt_dir: str | Path) -> Optional[int]:
     for d in root.iterdir():
         if d.is_dir() and d.name.startswith("step_") \
                 and not d.name.endswith(".tmp") \
-                and (d / "manifest.json").exists():
+                and _manifest_ok(d):
             steps.append(int(d.name.split("_")[1]))
     return max(steps) if steps else None
 

@@ -146,12 +146,26 @@ def _tuned_schedule(n_pes: int, delay: float, partial_tree: bool,
     (n_pes, delay): the tuner sweep runs once per design point, through
     the shared compiled scanned core.  Subset trees (<= 256 PEs) search
     exhaustively — their composition count is small; the full-cluster
-    tree uses the hierarchy-aware pruned space (128 vs 512 candidates)."""
+    tree uses the hierarchy-aware pruned space (128 vs 512 candidates).
+
+    Like every 5G mode cache below, this reads through the persistent
+    on-disk schedule store (:mod:`repro.runtime.schedule_cache`) when
+    ``REPRO_SCHEDULE_CACHE`` is set, so a fresh process serves cached
+    sync modes without re-running the tuner sweep."""
     from . import tuning
+    from ..runtime import schedule_cache
     prune = "none" if n_pes <= 256 else "hierarchy"
-    return tuning.best_schedule(
+    key = ("fiveg_tuned", int(n_pes), float(delay), bool(partial_tree),
+           prune, repr(cfg))
+    hit = schedule_cache.load(key)
+    if hit is not None:
+        return schedule_cache.decode_schedule(hit["schedule"], cfg)
+    sched = tuning.best_schedule(
         jax.random.PRNGKey(_TUNING_SEED), n_pes, delay=delay, n_trials=8,
         cfg=cfg, prune=prune, partial=partial_tree)
+    schedule_cache.store(key,
+                         {"schedule": schedule_cache.encode_schedule(sched)})
+    return sched
 
 
 @functools.lru_cache(maxsize=None)
@@ -159,18 +173,26 @@ def _placed_schedule(n_pes: int, delay: float, cfg: TeraPoolConfig):
     """Jointly tuned (schedule, placement) pair for one arrival scatter:
     the hierarchy-pruned composition space crossed with every named
     counter-placement strategy, one compiled sweep (cached per design
-    point like :func:`_tuned_schedule`)."""
+    point like :func:`_tuned_schedule`, disk store included)."""
     from . import tuning
+    from ..runtime import schedule_cache
     prune = "none" if n_pes <= 256 else "hierarchy"
-    return tuning.best_placed_schedule(
+    key = ("fiveg_placed", int(n_pes), float(delay), prune, repr(cfg))
+    hit = schedule_cache.load(key)
+    if hit is not None:
+        return schedule_cache.decode_pair(hit, cfg)
+    sched, plc = tuning.best_placed_schedule(
         jax.random.PRNGKey(_TUNING_SEED), n_pes, delay=delay, n_trials=8,
         cfg=cfg, prune=prune)
+    schedule_cache.store(key, schedule_cache.encode_pair(sched, plc))
+    return sched, plc
 
 
 @functools.lru_cache(maxsize=None)
 def _workload_schedules(app: FiveGConfig, cfg: TeraPoolConfig):
     """Per-epoch workload-tuned (schedule, placement) pairs for the
-    ``sync="workload"`` mode, cached per (app, cfg).
+    ``sync="workload"`` mode, cached per (app, cfg) — in memory and,
+    when enabled, in the persistent schedule store.
 
     The STAGE barrier is tuned (jointly with counter placement) on the
     FFT butterfly-stage arrival model; the GLOBAL barrier separately on
@@ -181,8 +203,14 @@ def _workload_schedules(app: FiveGConfig, cfg: TeraPoolConfig):
     episodes rather than assuming one uniform proxy scatter."""
     from . import tuning, workloads
     from .placement import STRATEGIES
+    from ..runtime import schedule_cache
     n = cfg.n_pes
     prune = "none" if n <= 256 else "hierarchy"
+    key = ("fiveg_workload", repr(app), prune, repr(cfg))
+    hit = schedule_cache.load(key)
+    if hit is not None:
+        return (schedule_cache.decode_pair(hit["stage"], cfg)
+                + schedule_cache.decode_pair(hit["global"], cfg))
     k_stage, k_mm = jax.random.split(jax.random.PRNGKey(_TUNING_SEED))
     stage_arr = workloads.arrival_batch(k_stage, "fiveg_fft_stage",
                                         (8, n), cfg=cfg, app=app)
@@ -194,6 +222,9 @@ def _workload_schedules(app: FiveGConfig, cfg: TeraPoolConfig):
     global_sched, global_plc, _ = tuning.tune_for_arrivals(
         jnp.concatenate([dep_arr, mm_arr]), cfg, prune=prune,
         placements=STRATEGIES)
+    schedule_cache.store(key, {
+        "stage": schedule_cache.encode_pair(stage_sched, stage_plc),
+        "global": schedule_cache.encode_pair(global_sched, global_plc)})
     return stage_sched, stage_plc, global_sched, global_plc
 
 

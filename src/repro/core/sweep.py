@@ -189,13 +189,18 @@ def _sweep_grid(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
 # Device sharding over the schedule axis.
 # ---------------------------------------------------------------------------
 
-def _grid_devices(n_sched: int, shard: bool):
+def _grid_devices(n_sched: int, shard: bool, devices=None):
     """The device tuple to shard the schedule axis over, or ``None``
     for the plain single-device path (one device, indivisible stack, or
-    sharding disabled)."""
+    sharding disabled).
+
+    ``devices`` overrides the visible-device default — the elastic
+    resilient runtime (:mod:`repro.runtime.resilient_sweep`) passes its
+    surviving-device tuple here so a sweep continues on a shrunken mesh
+    after simulated device loss."""
     if not shard:
         return None
-    devs = jax.devices()
+    devs = list(devices) if devices is not None else jax.devices()
     if len(devs) <= 1 or n_sched % len(devs) != 0:
         return None
     return tuple(devs)
@@ -220,10 +225,11 @@ def _sharded_grid(devices: tuple, body: str, cfg: TeraPoolConfig,
 
 def _dispatch_grid(body: str, tables: LevelTable, fixed: jnp.ndarray,
                    block: jnp.ndarray, cfg: TeraPoolConfig, core: str,
-                   shard: bool) -> BarrierResult:
+                   shard: bool, devices=None) -> BarrierResult:
     """Run one grid chunk: sharded over the schedule axis when several
-    devices divide it, plain jit otherwise."""
-    devices = _grid_devices(tables.group_sizes.shape[0], shard)
+    devices divide it, plain jit otherwise.  ``devices`` restricts the
+    shardable device pool (see :func:`_grid_devices`)."""
+    devices = _grid_devices(tables.group_sizes.shape[0], shard, devices)
     with barrier_sim.quiet_donation():
         if devices is None:
             grid = {"sweep": _sweep_grid, "arrival": _arrival_grid}[body]
@@ -258,7 +264,8 @@ def sweep_schedules(key: jax.Array,
                     placements: Sequence | None = None, *,
                     core: str | None = None,
                     trial_chunk: int | None = None,
-                    shard: bool = True) -> SweepResult:
+                    shard: bool = True,
+                    devices=None) -> SweepResult:
     """Run ANY same-``n_pes`` schedule stack x delay x trial grid in one
     compiled call — uniform radices, mixed-radix compositions and
     counter placements alike flow through the same jitted program.
@@ -270,7 +277,8 @@ def sweep_schedules(key: jax.Array,
     (telescope/scan); ``trial_chunk`` bounds the live grid memory by
     splitting the trial axis (chunked == unchunked bit-for-bit; the
     trial draws happen once, up front); ``shard`` allows splitting the
-    schedule axis across visible devices."""
+    schedule axis across visible devices (``devices`` restricts the
+    pool to an explicit tuple, e.g. the survivors of a device loss)."""
     schedules = tuple(schedules)
     tables = barrier.stack_tables(schedules, cfg, placements)
     n = schedules[0].n_pes
@@ -279,7 +287,7 @@ def sweep_schedules(key: jax.Array,
     core = barrier_sim.resolve_core(core)
     res = _concat_results([
         _dispatch_grid("sweep", tables, d, jnp.copy(unit[lo:hi]), cfg,
-                       core, shard)
+                       core, shard, devices)
         for lo, hi in _trial_chunks(n_trials, trial_chunk)])
     # Placement-free sweeps keep the documented empty tuple (consumers
     # treat () and all-None alike via ``res.placements or ...``).
@@ -336,7 +344,8 @@ def sweep_arrivals(arrivals: jnp.ndarray,
                    kernels: Sequence[str] | None = None, *,
                    core: str | None = None,
                    trial_chunk: int | None = None,
-                   shard: bool = True) -> ArrivalSweepResult:
+                   shard: bool = True,
+                   devices=None) -> ArrivalSweepResult:
     """Sweep a stack of MEASURED arrival matrices across a schedule
     (x optional placement) stack in one compiled call.
 
@@ -373,7 +382,8 @@ def sweep_arrivals(arrivals: jnp.ndarray,
     fixed = jnp.zeros((0,), jnp.float32)   # no delay axis for this body
     res = _concat_results([
         _dispatch_grid("arrival", tables, fixed,
-                       jnp.copy(arrivals[:, lo:hi]), cfg, core, shard)
+                       jnp.copy(arrivals[:, lo:hi]), cfg, core, shard,
+                       devices)
         for lo, hi in _trial_chunks(n_trials, trial_chunk)])
     kernels = (tuple(kernels) if kernels is not None
                else tuple(f"workload{i}" for i in range(arrivals.shape[0])))

@@ -433,10 +433,26 @@ def tuned_for_workload(kernel: str, n_pes: int | None = None,
                        prune: str = "none", n_trials: int = 8,
                        placements: Tuple[str, ...] | None = None
                        ) -> Tuple[BarrierSchedule, CounterPlacement | None]:
-    """The lru-cached schedule store: the winning (schedule, placement)
+    """The two-layer schedule store: the winning (schedule, placement)
     for ``kernel`` at ``(n_pes, cfg)``, tuned once under a fixed seed
-    and reused by every later consumer (apps, benchmarks, examples)."""
+    and reused by every later consumer (apps, benchmarks, examples).
+
+    The lru cache is the in-process layer; beneath it sits the
+    persistent, checksummed on-disk store of
+    :mod:`repro.runtime.schedule_cache` (active when
+    ``REPRO_SCHEDULE_CACHE`` is set), so a SECOND PROCESS asking for
+    the same ``(kernel, n_pes, cfg)`` performs zero sweep recomputation
+    — and a corrupt cache entry is detected and re-tuned, not
+    trusted."""
+    from ..runtime import schedule_cache
+    key = ("tuned_for_workload", kernel, int(n_pes or cfg.n_pes),
+           repr(cfg), prune, int(n_trials), placements)
+    hit = schedule_cache.load(key)
+    if hit is not None:
+        return schedule_cache.decode_pair(hit, cfg)
     p = tune_for_workload(jax.random.PRNGKey(_WORKLOAD_TUNING_SEED),
                           kernel, n_pes, n_trials, cfg, prune=prune,
                           placements=placements)
+    schedule_cache.store(key, schedule_cache.encode_pair(p.schedule,
+                                                         p.placement))
     return p.schedule, p.placement

@@ -1,7 +1,24 @@
-"""Fault-tolerant, elastic runtime."""
-from . import elastic
+"""Fault-tolerant, elastic runtime: the training-loop supervisor
+(:mod:`~repro.runtime.fault`), elastic re-meshing
+(:mod:`~repro.runtime.elastic`), deterministic fault injection
+(:mod:`~repro.runtime.inject`), the persistent schedule cache
+(:mod:`~repro.runtime.schedule_cache`) and the resilient sweep server
+(:mod:`~repro.runtime.resilient_sweep`)."""
+from . import elastic, inject, schedule_cache
 from .fault import (FaultConfig, FaultTolerantRunner, StepStats,
-                    StragglerAbort, supervise)
+                    StragglerAbort, backoff_delay, supervise)
+from .inject import (DeviceLoss, FaultPlan, Preemption, SimulatedFault,
+                     SimulatedOOM)
+from .resilient_sweep import (ResilienceConfig, SweepReport,
+                              resilient_sweep_arrivals,
+                              resilient_sweep_schedules,
+                              resilient_sweep_workloads,
+                              resilient_tune_barrier)
 
-__all__ = ["FaultConfig", "FaultTolerantRunner", "StepStats",
-           "StragglerAbort", "elastic", "supervise"]
+__all__ = ["DeviceLoss", "FaultConfig", "FaultPlan",
+           "FaultTolerantRunner", "Preemption", "ResilienceConfig",
+           "SimulatedFault", "SimulatedOOM", "StepStats",
+           "StragglerAbort", "SweepReport", "backoff_delay", "elastic",
+           "inject", "resilient_sweep_arrivals",
+           "resilient_sweep_schedules", "resilient_sweep_workloads",
+           "resilient_tune_barrier", "schedule_cache", "supervise"]

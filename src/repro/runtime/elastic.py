@@ -43,6 +43,29 @@ def make_elastic_mesh(*, model_parallel: int,
     return mesh
 
 
+def viable_schedule_devices(devices: Sequence, n_schedules: int, *,
+                            min_devices: int = 1) -> Optional[tuple]:
+    """Largest prefix of ``devices`` whose size divides the schedule
+    axis — the 1-D sibling of :func:`viable_mesh_shape` for the barrier
+    sweeps, whose only sharded axis is the schedule stack
+    (:mod:`repro.core.sweep` ``shard_map``s over ``("sched",)``).
+
+    After a device loss the resilient sweep runtime
+    (:mod:`repro.runtime.resilient_sweep`) calls this with the
+    survivors: the sweep continues on the biggest mesh that still
+    divides the stack evenly (1 device — the transparent unsharded
+    fallback — always qualifies when ``min_devices <= 1``).  Returns
+    ``None`` when fewer than ``min_devices`` devices remain viable.
+    """
+    if n_schedules < 1:
+        raise ValueError(f"need a non-empty schedule axis, got "
+                         f"{n_schedules}")
+    for d in range(len(devices), min_devices - 1, -1):
+        if d >= 1 and n_schedules % d == 0:
+            return tuple(devices[:d])
+    return None
+
+
 def rescale_batch(global_batch: int, old_data: int, new_data: int) -> int:
     """Keep per-device batch constant across a re-mesh (synchronous DP
     semantics: the optimizer sees a smaller global batch until capacity

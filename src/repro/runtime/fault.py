@@ -20,6 +20,7 @@ Production loop for thousands of nodes, CPU-testable in miniature:
 from __future__ import annotations
 
 import dataclasses
+import random
 import statistics
 import time
 from pathlib import Path
@@ -40,6 +41,24 @@ class FaultConfig:
     straggler_factor: float = 3.0
     max_stragglers: int = 5
     max_restarts: int = 3
+    # Restart backoff: attempt k sleeps ~ base * 2**k, jittered by a
+    # capped deterministic fraction, never above ``backoff_cap`` —
+    # immediate hot-loop restarts hammer the scheduler the same way
+    # simultaneous barrier arrivals hammer a counter bank.
+    backoff_base: float = 0.1
+    backoff_cap: float = 5.0
+    backoff_jitter: float = 0.25
+
+
+def backoff_delay(attempt: int, *, base: float, cap: float,
+                  jitter: float) -> float:
+    """Exponential backoff with a capped, DETERMINISTIC jitter: attempt
+    ``k`` waits ``min(cap, base * 2**k)`` stretched by a pseudo-random
+    fraction in ``[0, min(jitter, 1)]`` seeded on ``k`` — repeatable in
+    tests, desynchronized across attempts, and never above ``cap``."""
+    raw = min(cap, base * (2.0 ** attempt))
+    frac = random.Random(attempt).uniform(0.0, max(0.0, min(jitter, 1.0)))
+    return min(cap, raw * (1.0 + frac))
 
 
 @dataclasses.dataclass
@@ -116,19 +135,34 @@ class FaultTolerantRunner:
 
 
 def supervise(make_runner: Callable[[], FaultTolerantRunner],
-              n_steps: int, cfg: FaultConfig) -> Any:
+              n_steps: int, cfg: FaultConfig, *,
+              sleep: Callable[[float], None] = time.sleep) -> Any:
     """Restart-on-failure supervisor: rebuilds the runner (and hence the
-    mesh — elastic re-meshing) after every fault, up to max_restarts."""
+    mesh — elastic re-meshing) after every fault, up to max_restarts.
+
+    Restart ``k`` first sleeps :func:`backoff_delay`(k-1) — exponential
+    with capped jitter, never a hot loop — and the failed attempt's
+    ``history`` is carried into the fresh runner, so the step record of
+    a supervised run is continuous across faults instead of silently
+    resetting.  ``sleep`` is injectable for tests."""
     last_exc: Optional[BaseException] = None
+    carried: List[StepStats] = []
     for attempt in range(cfg.max_restarts + 1):
+        if attempt:
+            sleep(backoff_delay(attempt - 1, base=cfg.backoff_base,
+                                cap=cfg.backoff_cap,
+                                jitter=cfg.backoff_jitter))
         runner = make_runner()
+        runner.history.extend(carried)
         try:
             return runner.run(n_steps)
         except StragglerAbort as e:
             last_exc = e
+            carried = list(runner.history)
             continue          # reschedule: new runner, resumes from ckpt
         except Exception as e:  # noqa: BLE001 — any node fault
             last_exc = e
+            carried = list(runner.history)
             continue
     raise RuntimeError(
         f"giving up after {cfg.max_restarts} restarts") from last_exc

@@ -1,0 +1,450 @@
+"""Resilient sweep serving: checkpoint/resume, fault tolerance and
+elastic re-sharding for the one-compile barrier sweeps.
+
+The paper's insight — one late PE stalls the whole barrier — applies
+to the tuning service itself: a 512-composition x placement x workload
+sweep sharded across devices is only as durable as its flakiest
+device.  This module wraps the chunked sweep loop of
+:mod:`repro.core.sweep` in the production loop the seed runtime
+(:mod:`repro.runtime.fault` / :mod:`repro.runtime.elastic`) sketched
+for training:
+
+* **Per-chunk atomic checkpointing** — every completed trial chunk is
+  published with :mod:`repro.checkpoint`'s tmp-dir + ``os.replace``
+  pattern.  Because each chunk is a pure function of ``(key, lo, hi)``
+  (the Monte-Carlo unit block is drawn once, up front, exactly as
+  :func:`repro.core.sweep.sweep_schedules` draws it), a killed sweep
+  resumed from its checkpoint directory returns BIT-FOR-BIT the same
+  arrays as an uninterrupted run.
+* **Deterministic fault injection** — a
+  :class:`~repro.runtime.inject.FaultPlan` raises simulated
+  device-loss / OOM / preemption faults at chosen chunk boundaries
+  (CPU-testable; see :mod:`repro.runtime.inject`).
+* **Supervised retry** — non-fatal faults restart the chunk loop with
+  exponential, jitter-capped backoff (:func:`repro.runtime.fault.
+  backoff_delay`) up to ``max_restarts``; chunks already in memory or
+  on disk are never recomputed.  A per-chunk wall-time straggler
+  watchdog (median-relative, like the runner's per-step watchdog)
+  raises :class:`~repro.runtime.fault.StragglerAbort` so a sweep stuck
+  on one slow chunk gets rescheduled instead of stalling the grid.
+* **Elastic re-sharding** — on device loss the schedule-axis mesh is
+  rebuilt from the survivors
+  (:func:`repro.runtime.elastic.viable_schedule_devices`) and the
+  sweep continues on the smaller mesh.  ``shard_map`` results are
+  device-count-invariant (tests/test_telescope.py), so shrinking the
+  mesh preserves bit-for-bit equality too.
+
+Entry points mirror the plain engines one-for-one —
+:func:`resilient_sweep_schedules` / :func:`resilient_sweep_arrivals`
+drive :func:`repro.core.sweep.sweep_schedules` /
+:func:`~repro.core.sweep.sweep_arrivals` semantics, and
+:func:`resilient_tune_barrier` / :func:`resilient_sweep_workloads`
+wrap the tuner grids of :mod:`repro.core.tuning`.  Each returns a
+:class:`SweepReport` carrying the ordinary result object plus the
+resilience ledger (chunks resumed vs computed, restarts, faults,
+mesh-width history, checkpoint time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import statistics
+import time
+from pathlib import Path
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import checkpoint
+from ..core import barrier, barrier_sim
+from ..core import sweep as sweep_mod
+from ..core.barrier_sim import BarrierResult
+from ..core.topology import DEFAULT, TeraPoolConfig
+from . import elastic
+from .fault import StragglerAbort, backoff_delay
+from .inject import DeviceLoss, FaultPlan, SimulatedFault
+
+# Per-chunk trial-axis width when the caller does not choose one: small
+# enough that a kill forfeits little work, large enough that the
+# checkpoint write stays a rounding error next to the N=1024 grid
+# compute (bench_resilience.py measures the overhead).
+DEFAULT_TRIAL_CHUNK = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs of the resilient chunk loop."""
+
+    ckpt_dir: str
+    trial_chunk: int = DEFAULT_TRIAL_CHUNK
+    max_restarts: int = 8
+    backoff_base: float = 0.02
+    backoff_cap: float = 1.0
+    backoff_jitter: float = 0.25
+    # Chunks slower than factor x the running median (and above the
+    # floor — compile of the first chunk must never trip it) abort the
+    # attempt so the supervisor can reschedule.
+    straggler_factor: float = 50.0
+    straggler_floor: float = 30.0
+    min_devices: int = 1
+    cleanup: bool = False     # drop the chunk store once the result is out
+
+
+@dataclasses.dataclass
+class SweepReport:
+    """A sweep result plus the resilience ledger of how it was made."""
+
+    result: object                 # SweepResult | ArrivalSweepResult
+    chunks_total: int = 0
+    chunks_resumed: int = 0        # restored from the checkpoint store
+    chunks_computed: int = 0       # executed (and checkpointed) now
+    restarts: int = 0              # in-process supervisor restarts
+    faults: List[str] = dataclasses.field(default_factory=list)
+    device_history: List[int] = dataclasses.field(default_factory=list)
+    wall_seconds: float = 0.0
+    ckpt_seconds: float = 0.0      # time inside checkpoint save/restore
+
+
+def _run_digest(parts: Sequence) -> str:
+    """Stable digest of everything a chunked run's results depend on —
+    a checkpoint store only resumes a run with the SAME digest."""
+    h = hashlib.sha256()
+    for p in parts:
+        if isinstance(p, (np.ndarray, jnp.ndarray)):
+            h.update(np.ascontiguousarray(np.asarray(p)).tobytes())
+        else:
+            h.update(repr(p).encode())
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
+class _ChunkedGrid:
+    """Chunk-by-chunk executor of one (tables, fixed, block) grid with
+    checkpoint/resume, fault injection, a straggler watchdog and
+    elastic re-sharding.  ``chunk_fn(lo, hi)`` builds the donated
+    block slice for one trial chunk; ``chunk_shape(lo, hi)`` is the
+    result-array shape of that chunk (for the restore template)."""
+
+    def __init__(self, kind: str, tables, fixed, chunk_fn, chunk_shape,
+                 n_trials: int, cfg: TeraPoolConfig, core: str,
+                 rcfg: ResilienceConfig, plan: Optional[FaultPlan],
+                 devices: Optional[Sequence], digest: str,
+                 sleep: Callable[[float], None],
+                 clock: Callable[[], float]):
+        self.kind = kind
+        self.tables = tables
+        self.fixed = fixed
+        self.chunk_fn = chunk_fn
+        self.chunk_shape = chunk_shape
+        self.cfg = cfg
+        self.core = core
+        self.rcfg = rcfg
+        self.plan = plan
+        self.devices = (tuple(devices) if devices is not None
+                        else tuple(jax.devices()))
+        self.sleep = sleep
+        self.clock = clock
+        self.root = Path(rcfg.ckpt_dir)
+        self.chunks = list(sweep_mod._trial_chunks(n_trials,
+                                                   rcfg.trial_chunk))
+        self.report = SweepReport(result=None,
+                                  chunks_total=len(self.chunks))
+        self.report.device_history.append(len(self.devices))
+        self._parts: dict = {}          # chunk idx -> BarrierResult
+        self._durations: List[float] = []
+        self._prepare_store(digest)
+
+    # -- checkpoint store -------------------------------------------------
+    def _prepare_store(self, digest: str) -> None:
+        """Bind the store to this run's digest; wipe a stale store left
+        by a DIFFERENT run (never silently mix chunk sets)."""
+        meta_path = self.root / "meta.json"
+        if meta_path.exists():
+            try:
+                meta = json.loads(meta_path.read_text())
+            except (OSError, json.JSONDecodeError):
+                meta = {}
+            if meta.get("digest") == digest:
+                return
+            shutil.rmtree(self.root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        tmp = self.root / "meta.json.tmp"
+        tmp.write_text(json.dumps({"digest": digest,
+                                   "chunks": len(self.chunks)}, indent=1))
+        os.replace(tmp, meta_path)
+
+    def _template(self, lo: int, hi: int) -> dict:
+        shape = self.chunk_shape(lo, hi)
+        return {f: np.zeros(shape, np.float32)
+                for f in BarrierResult._fields}
+
+    def _restore_chunk(self, idx: int, lo: int, hi: int
+                       ) -> Optional[BarrierResult]:
+        """The chunk's checkpointed result, or ``None`` if absent or
+        unreadable (unreadable == recompute, never trust)."""
+        step_dir = self.root / f"step_{idx:08d}"
+        if not step_dir.exists():
+            return None
+        t0 = self.clock()
+        try:
+            tree, _ = checkpoint.restore(self.root, self._template(lo, hi),
+                                         step=idx)
+        except Exception:           # torn/corrupt chunk: recompute it
+            return None
+        finally:
+            self.report.ckpt_seconds += self.clock() - t0
+        return BarrierResult(**{f: np.asarray(tree[f])
+                                for f in BarrierResult._fields})
+
+    def _save_chunk(self, idx: int, res: BarrierResult) -> None:
+        t0 = self.clock()
+        checkpoint.save(self.root, idx,
+                        {f: v for f, v in zip(BarrierResult._fields, res)})
+        self.report.ckpt_seconds += self.clock() - t0
+
+    # -- watchdog ---------------------------------------------------------
+    def _watch(self, seconds: float) -> None:
+        if len(self._durations) >= 3:
+            med = statistics.median(self._durations)
+            limit = max(self.rcfg.straggler_floor,
+                        self.rcfg.straggler_factor * med)
+            if seconds > limit:
+                raise StragglerAbort(
+                    f"chunk took {seconds:.3f}s > {limit:.3f}s "
+                    f"({self.rcfg.straggler_factor}x median {med:.3f}s)")
+        self._durations.append(seconds)
+
+    # -- chunk loop -------------------------------------------------------
+    def _attempt(self) -> None:
+        for idx, (lo, hi) in enumerate(self.chunks):
+            if self.plan is not None:
+                self.plan.at_chunk(idx)
+            if idx in self._parts:
+                continue
+            restored = self._restore_chunk(idx, lo, hi)
+            if restored is not None:
+                self._parts[idx] = restored
+                self.report.chunks_resumed += 1
+                continue
+            t0 = self.clock()
+            res = sweep_mod._dispatch_grid(
+                self.kind, self.tables, self.fixed, self.chunk_fn(lo, hi),
+                self.cfg, self.core, shard=True, devices=self.devices)
+            res = jax.block_until_ready(res)
+            dt = self.clock() - t0
+            if self.plan is not None:
+                dt += self.plan.straggle_seconds(idx)
+            self._watch(dt)
+            # Pull the chunk to host arrays: chunks computed on
+            # different-width meshes (before/after a re-shard) carry
+            # incompatible shardings that jnp.concatenate rejects, and
+            # device->host transfers are bit-exact.
+            res = BarrierResult(*(np.asarray(f) for f in res))
+            self._save_chunk(idx, res)
+            self._parts[idx] = res
+            self.report.chunks_computed += 1
+
+    def _on_fault(self, exc: Exception) -> None:
+        self.report.faults.append(str(exc))
+        if self.report.restarts >= self.rcfg.max_restarts:
+            raise RuntimeError(
+                f"giving up after {self.rcfg.max_restarts} restarts "
+                f"(faults: {self.report.faults})") from exc
+        if isinstance(exc, DeviceLoss):
+            survivors = self.devices[:max(0, len(self.devices)
+                                          - exc.n_lost)]
+            mesh = elastic.viable_schedule_devices(
+                survivors, self.tables.group_sizes.shape[0],
+                min_devices=self.rcfg.min_devices)
+            if mesh is None:
+                raise RuntimeError(
+                    f"only {len(survivors)} device(s) survive; need "
+                    f">= {self.rcfg.min_devices}") from exc
+            self.devices = mesh
+            self.report.device_history.append(len(mesh))
+        self.sleep(backoff_delay(self.report.restarts,
+                                 base=self.rcfg.backoff_base,
+                                 cap=self.rcfg.backoff_cap,
+                                 jitter=self.rcfg.backoff_jitter))
+        self.report.restarts += 1
+        self._durations.clear()       # fresh watchdog baseline
+
+    def run(self) -> BarrierResult:
+        t0 = self.clock()
+        while True:
+            try:
+                self._attempt()
+                break
+            except SimulatedFault as e:
+                if e.fatal:
+                    raise               # process death: resume next call
+                self._on_fault(e)
+            except StragglerAbort as e:
+                self._on_fault(e)
+        out = sweep_mod._concat_results(
+            [self._parts[i] for i in range(len(self.chunks))])
+        out = BarrierResult(*(jnp.asarray(f) for f in out))
+        self.report.wall_seconds = self.clock() - t0
+        if self.rcfg.cleanup:
+            shutil.rmtree(self.root, ignore_errors=True)
+        return out
+
+
+def resilient_sweep_schedules(
+        key: jax.Array, schedules: Sequence[barrier.BarrierSchedule],
+        delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
+        n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT,
+        placements: Sequence | None = None, *,
+        resilience: ResilienceConfig, core: str | None = None,
+        fault_plan: Optional[FaultPlan] = None,
+        devices: Optional[Sequence] = None,
+        sleep: Callable[[float], None] = time.sleep,
+        clock: Callable[[], float] = time.perf_counter) -> SweepReport:
+    """:func:`repro.core.sweep.sweep_schedules`, chunk-by-chunk with
+    checkpoint/resume.  The unit block is drawn exactly as the plain
+    engine draws it and each chunk is the same ``_dispatch_grid`` call
+    the plain chunked path makes, so the assembled
+    :class:`~repro.core.sweep.SweepResult` is bit-for-bit identical to
+    an uninterrupted (chunked or unchunked) sweep — killed, resumed,
+    re-sharded or not."""
+    schedules = tuple(schedules)
+    tables = barrier.stack_tables(schedules, cfg, placements)
+    n = schedules[0].n_pes
+    unit = jax.random.uniform(key, (n_trials, n), jnp.float32, 0.0, 1.0)
+    d = jnp.asarray(delays, jnp.float32)
+    core = barrier_sim.resolve_core(core)
+    names = sweep_mod._stack_names(
+        schedules, tuple(placements) if placements is not None else ())
+    digest = _run_digest(["sweep", names, unit, d, n_trials,
+                          resilience.trial_chunk, cfg, core])
+    s_count = len(schedules)
+    driver = _ChunkedGrid(
+        "sweep", tables, d,
+        chunk_fn=lambda lo, hi: jnp.copy(unit[lo:hi]),
+        chunk_shape=lambda lo, hi: (s_count, d.shape[0], hi - lo),
+        n_trials=n_trials, cfg=cfg, core=core, rcfg=resilience,
+        plan=fault_plan, devices=devices, digest=digest, sleep=sleep,
+        clock=clock)
+    res = driver.run()
+    placements = tuple(placements) if placements is not None else ()
+    driver.report.result = sweep_mod.SweepResult(
+        schedules=schedules, delays=d, placements=placements,
+        **res._asdict())
+    return driver.report
+
+
+def resilient_sweep_arrivals(
+        arrivals, schedules: Sequence[barrier.BarrierSchedule],
+        cfg: TeraPoolConfig = DEFAULT, placements: Sequence | None = None,
+        kernels: Sequence[str] | None = None, *,
+        resilience: ResilienceConfig, core: str | None = None,
+        fault_plan: Optional[FaultPlan] = None,
+        devices: Optional[Sequence] = None,
+        sleep: Callable[[float], None] = time.sleep,
+        clock: Callable[[], float] = time.perf_counter) -> SweepReport:
+    """:func:`repro.core.sweep.sweep_arrivals` with the resilient chunk
+    loop — same validation, same grid calls, same bit-for-bit
+    guarantee as :func:`resilient_sweep_schedules`."""
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    if arrivals.ndim == 2:
+        arrivals = arrivals[None]
+    if arrivals.ndim != 3:
+        raise ValueError(
+            f"arrivals must be (n_kernels, n_trials, n_pes) or "
+            f"(n_trials, n_pes), got shape {arrivals.shape}")
+    schedules = tuple(schedules)
+    if schedules and arrivals.shape[-1] != schedules[0].n_pes:
+        raise ValueError(
+            f"arrivals has {arrivals.shape[-1]} PEs, schedules expect "
+            f"{schedules[0].n_pes}")
+    if kernels is not None and len(kernels) != arrivals.shape[0]:
+        raise ValueError(
+            f"{arrivals.shape[0]} arrival stacks but {len(kernels)} "
+            f"kernel names")
+    tables = barrier.stack_tables(schedules, cfg, placements)
+    core = barrier_sim.resolve_core(core)
+    n_trials = arrivals.shape[1]
+    fixed = jnp.zeros((0,), jnp.float32)
+    names = sweep_mod._stack_names(
+        schedules, tuple(placements) if placements is not None else ())
+    digest = _run_digest(["arrival", names, arrivals,
+                          resilience.trial_chunk, cfg, core])
+    s_count, k_count = len(schedules), arrivals.shape[0]
+    driver = _ChunkedGrid(
+        "arrival", tables, fixed,
+        chunk_fn=lambda lo, hi: jnp.copy(arrivals[:, lo:hi]),
+        chunk_shape=lambda lo, hi: (s_count, k_count, hi - lo),
+        n_trials=n_trials, cfg=cfg, core=core, rcfg=resilience,
+        plan=fault_plan, devices=devices, digest=digest, sleep=sleep,
+        clock=clock)
+    res = driver.run()
+    kernels = (tuple(kernels) if kernels is not None
+               else tuple(f"workload{i}" for i in range(k_count)))
+    placements = tuple(placements) if placements is not None else ()
+    driver.report.result = sweep_mod.ArrivalSweepResult(
+        schedules=schedules, kernels=kernels, placements=placements,
+        **res._asdict())
+    return driver.report
+
+
+def resilient_tune_barrier(
+        key, n_pes: int | None = None,
+        delays: Sequence[float] = (0.0, 128.0, 512.0, 2048.0),
+        n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT, *,
+        prune: str = "none", schedules=None,
+        placements: Sequence[str] | None = None,
+        resilience: ResilienceConfig, core: str | None = None,
+        fault_plan: Optional[FaultPlan] = None,
+        devices: Optional[Sequence] = None,
+        sleep: Callable[[float], None] = time.sleep,
+        clock: Callable[[], float] = time.perf_counter) -> SweepReport:
+    """:func:`repro.core.tuning.tune_barrier` under the resilient loop:
+    the full composition x placement x delay x trial grid, checkpointed
+    per trial chunk."""
+    from ..core import tuning
+    if schedules is None:
+        schedules = tuning.all_schedules(n_pes, cfg, prune=prune)
+    scheds, placs = tuning._cross_placements(schedules, placements, cfg)
+    return resilient_sweep_schedules(
+        key, scheds, delays, n_trials, cfg, placements=placs,
+        resilience=resilience, core=core, fault_plan=fault_plan,
+        devices=devices, sleep=sleep, clock=clock)
+
+
+def resilient_sweep_workloads(
+        key, kernels: Sequence[str] | None = None,
+        n_pes: int | None = None, n_trials: int = 8,
+        cfg: TeraPoolConfig = DEFAULT, *, prune: str = "none",
+        schedules=None, placements: Sequence[str] | None = None,
+        resilience: ResilienceConfig, core: str | None = None,
+        fault_plan: Optional[FaultPlan] = None,
+        devices: Optional[Sequence] = None,
+        sleep: Callable[[float], None] = time.sleep,
+        clock: Callable[[], float] = time.perf_counter) -> SweepReport:
+    """:func:`repro.core.tuning.sweep_workloads` under the resilient
+    loop: every kernel's measured arrival batch (drawn exactly as the
+    plain tuner draws it) across the schedule stack, checkpointed per
+    trial chunk."""
+    from ..core import tuning, workloads as workloads_mod
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    if kernels is None:
+        kernels = workloads_mod.FIG6_KERNELS
+    kernels = tuple(kernels)
+    if not kernels:
+        raise ValueError("need at least one kernel to sweep")
+    keys = jax.random.split(key, len(kernels))
+    arrivals = jnp.stack([
+        workloads_mod.arrival_batch(k, kernel, (n_trials, n), cfg=cfg)
+        for k, kernel in zip(keys, kernels)])
+    if schedules is None:
+        schedules = tuning.all_schedules(n, cfg, prune=prune)
+    scheds, placs = tuning._cross_placements(schedules, placements, cfg)
+    return resilient_sweep_arrivals(
+        arrivals, scheds, cfg, placements=placs, kernels=kernels,
+        resilience=resilience, core=core, fault_plan=fault_plan,
+        devices=devices, sleep=sleep, clock=clock)

@@ -1,0 +1,186 @@
+"""Persistent, checksummed on-disk schedule cache.
+
+The tuner's in-process stores (``functools.lru_cache`` on
+:func:`repro.core.tuning.tuned_for_workload` and the 5G mode caches in
+:mod:`repro.core.fiveg`) die with the process — a serving deployment
+re-runs the full composition x placement sweep for every worker
+restart.  This module promotes those stores to a shared on-disk layer:
+
+* **Keyed on (kind, params, n_pes, cfg, code-version)** — the code
+  version is a digest of the simulator/tuner sources, so a cache
+  written by an older physics model is silently invalidated instead of
+  served (a tuned schedule is only as good as the simulator that
+  picked it).
+* **Atomic** — entries are published with the same tmp + ``os.replace``
+  pattern as checkpoints; concurrent writers race benignly (last
+  writer wins with a complete file, readers never see a torn entry).
+* **Checksummed** — every entry embeds a SHA-256 over its payload; a
+  corrupt or truncated entry is detected, dropped and recomputed,
+  never trusted (the acceptance bar of tests/test_resilience.py).
+
+The cache activates when ``REPRO_SCHEDULE_CACHE`` names a directory;
+unset, every consumer falls back to its in-memory store only (tests
+stay hermetic).  Payloads hold *encoded* schedules/placements —
+:func:`encode_schedule` round-trips any
+:class:`~repro.core.barrier.BarrierSchedule` through its level sizes
+(the schedule algebra re-derives spans and latencies from ``cfg``),
+and placements through their explicit bank/latency tables.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Optional, Tuple
+
+# Environment knob naming the cache directory; unset == disabled.
+CACHE_ENV = "REPRO_SCHEDULE_CACHE"
+
+# Process-level cache traffic counters (reset with ``reset_stats``).
+STATS = {"hits": 0, "misses": 0, "corrupt": 0, "stores": 0}
+
+
+def reset_stats() -> None:
+    for k in STATS:
+        STATS[k] = 0
+
+
+def cache_dir() -> Optional[Path]:
+    """The active cache directory, or ``None`` when caching is off.
+    Read per call so tests (and operators) can flip the env var."""
+    d = os.environ.get(CACHE_ENV)
+    return Path(d) if d else None
+
+
+@functools.lru_cache(maxsize=1)
+def code_version() -> str:
+    """Digest of every source file the tuned result depends on: the
+    simulator cores, the schedule/placement algebra, the sweep engine,
+    the tuner and the workload models.  Any edit to the physics
+    invalidates every cached schedule."""
+    from ..core import (barrier, barrier_sim, placement, sweep, topology,
+                        tuning, workloads)
+    h = hashlib.sha256()
+    for mod in (barrier, barrier_sim, placement, sweep, topology,
+                tuning, workloads):
+        h.update(Path(mod.__file__).read_bytes())
+        h.update(b"\x00")
+    return h.hexdigest()[:16]
+
+
+def _key_repr(key: tuple) -> str:
+    return repr(tuple(key) + ("code", code_version()))
+
+
+def _entry_path(root: Path, key: tuple) -> Path:
+    digest = hashlib.sha256(_key_repr(key).encode()).hexdigest()[:32]
+    return root / f"{digest}.json"
+
+
+def _payload_checksum(payload: dict) -> str:
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def load(key: tuple) -> Optional[dict]:
+    """The cached payload for ``key``, or ``None`` on miss.  Corrupt
+    entries (unparseable, checksum mismatch, digest collision) count in
+    ``STATS["corrupt"]``, are unlinked, and read as a miss."""
+    root = cache_dir()
+    if root is None:
+        return None
+    path = _entry_path(root, key)
+    if not path.exists():
+        STATS["misses"] += 1
+        return None
+    try:
+        entry = json.loads(path.read_text())
+        payload = entry["payload"]
+        if entry["sha256"] != _payload_checksum(payload):
+            raise ValueError("payload checksum mismatch")
+        if entry["key"] != _key_repr(key):
+            raise ValueError("key mismatch (digest collision?)")
+    except (OSError, json.JSONDecodeError, KeyError, TypeError,
+            ValueError, UnicodeDecodeError):
+        STATS["corrupt"] += 1
+        try:
+            path.unlink()
+        except OSError:
+            pass
+        return None
+    STATS["hits"] += 1
+    return payload
+
+
+def store(key: tuple, payload: dict) -> None:
+    """Atomically publish ``payload`` under ``key`` (no-op when the
+    cache is disabled)."""
+    root = cache_dir()
+    if root is None:
+        return
+    root.mkdir(parents=True, exist_ok=True)
+    entry = {"key": _key_repr(key),
+             "sha256": _payload_checksum(payload),
+             "payload": payload}
+    fd, tmp = tempfile.mkstemp(dir=root, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(json.dumps(entry, indent=1))
+        os.replace(tmp, _entry_path(root, key))
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    STATS["stores"] += 1
+
+
+# ---------------------------------------------------------------------------
+# Schedule / placement codecs.
+# ---------------------------------------------------------------------------
+
+def encode_schedule(schedule) -> dict:
+    """JSON form of a schedule: its level sizes + partial flag (spans
+    and latencies are re-derived from ``cfg`` on decode, so the codec
+    round-trips every constructor — kary/central/partial/mixed)."""
+    return {"sizes": list(schedule.sizes), "partial": bool(schedule.partial)}
+
+
+def decode_schedule(payload: dict, cfg):
+    from ..core import barrier
+    return barrier.mixed_radix_tree(tuple(int(s) for s in payload["sizes"]),
+                                    cfg=cfg, partial=bool(payload["partial"]))
+
+
+def encode_placement(placement) -> Optional[dict]:
+    if placement is None:
+        return None
+    return {"strategy": placement.strategy,
+            "banks": [list(row) for row in placement.banks],
+            "latencies": [list(row) for row in placement.latencies]}
+
+
+def decode_placement(payload: Optional[dict]):
+    if payload is None:
+        return None
+    from ..core.placement import CounterPlacement
+    return CounterPlacement(
+        strategy=str(payload["strategy"]),
+        banks=tuple(tuple(int(b) for b in row)
+                    for row in payload["banks"]),
+        latencies=tuple(tuple(int(x) for x in row)
+                        for row in payload["latencies"]))
+
+
+def encode_pair(schedule, placement) -> dict:
+    return {"schedule": encode_schedule(schedule),
+            "placement": encode_placement(placement)}
+
+
+def decode_pair(payload: dict, cfg) -> Tuple:
+    return (decode_schedule(payload["schedule"], cfg),
+            decode_placement(payload["placement"]))

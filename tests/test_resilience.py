@@ -1,0 +1,414 @@
+"""Resilient sweep serving: kill-at-any-chunk-boundary resume is
+bit-for-bit invisible (sweep_schedules AND sweep_arrivals, including
+the multi-device shard_map path with a shrunken mesh, run in an
+8-device subprocess), deterministic fault injection fires exactly
+once, the supervisor retries with capped backoff and elastic
+re-sharding, the straggler watchdog reschedules slow chunks, and the
+persistent schedule cache serves process-level hits while rejecting
+corrupt entries."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sweep, tuning
+from repro.runtime import (DeviceLoss, FaultPlan, Preemption,
+                           ResilienceConfig, SimulatedFault, SimulatedOOM,
+                           StragglerAbort, resilient_sweep_arrivals,
+                           resilient_sweep_schedules,
+                           resilient_sweep_workloads,
+                           resilient_tune_barrier, schedule_cache)
+
+KEY = jax.random.PRNGKey(0)
+REPO = Path(__file__).resolve().parent.parent
+DELAYS = (0.0, 512.0)
+N_TRIALS = 8
+
+
+def _rcfg(tmp_path, **kw):
+    kw.setdefault("trial_chunk", 2)
+    kw.setdefault("backoff_base", 0.0)
+    kw.setdefault("backoff_cap", 0.0)
+    return ResilienceConfig(ckpt_dir=str(tmp_path / "chunks"), **kw)
+
+
+def _nosleep(_):
+    pass
+
+
+def _assert_same(got, want):
+    for name, a, b in zip(got._fields, got, want):
+        if isinstance(a, (jnp.ndarray, np.ndarray)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+        else:
+            assert a == b, name
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic, fire-once.
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_fires_once():
+    plan = FaultPlan(faults={1: SimulatedOOM()}, straggle={2: 5.0})
+    plan.at_chunk(0)                       # no fault planned here
+    with pytest.raises(SimulatedOOM):
+        plan.at_chunk(1)
+    plan.at_chunk(1)                       # consumed: retry passes
+    assert plan.straggle_seconds(2) == 5.0
+    assert plan.straggle_seconds(2) == 0.0
+    assert plan.exhausted
+    assert len(plan.fired) == 2
+
+
+def test_fault_taxonomy():
+    assert Preemption().fatal
+    assert not SimulatedOOM().fatal
+    assert not DeviceLoss(2).fatal
+    assert DeviceLoss(2).n_lost == 2
+    with pytest.raises(ValueError):
+        DeviceLoss(0)
+
+
+# ---------------------------------------------------------------------------
+# Kill at EVERY chunk boundary, resume: bit-for-bit identical.
+# ---------------------------------------------------------------------------
+
+def test_sweep_schedules_kill_resume_every_boundary(tmp_path):
+    scheds = tuning.all_schedules(64)
+    base = sweep.sweep_schedules(KEY, scheds, DELAYS, N_TRIALS)
+    n_chunks = N_TRIALS // 2
+    for kill_at in range(n_chunks):
+        root = tmp_path / f"kill{kill_at}"
+        rc = _rcfg(root)
+        plan = FaultPlan(faults={kill_at: Preemption()})
+        with pytest.raises(SimulatedFault):
+            resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                      resilience=rc, fault_plan=plan,
+                                      sleep=_nosleep)
+        rep = resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                        resilience=rc, fault_plan=plan,
+                                        sleep=_nosleep)
+        _assert_same(rep.result, base)
+        assert rep.chunks_resumed == kill_at
+        assert rep.chunks_computed == n_chunks - kill_at
+        assert rep.chunks_total == n_chunks
+
+
+def test_sweep_arrivals_kill_resume(tmp_path):
+    scheds = tuning.all_schedules(64)
+    arr = 300.0 * jax.random.uniform(KEY, (2, 6, 64))
+    base = sweep.sweep_arrivals(arr, scheds, kernels=("a", "b"))
+    rc = _rcfg(tmp_path)
+    plan = FaultPlan(faults={2: Preemption()})
+    with pytest.raises(SimulatedFault):
+        resilient_sweep_arrivals(arr, scheds, kernels=("a", "b"),
+                                 resilience=rc, fault_plan=plan,
+                                 sleep=_nosleep)
+    rep = resilient_sweep_arrivals(arr, scheds, kernels=("a", "b"),
+                                   resilience=rc, fault_plan=plan,
+                                   sleep=_nosleep)
+    _assert_same(rep.result, base)
+    assert rep.chunks_resumed == 2 and rep.chunks_computed == 1
+
+
+# ---------------------------------------------------------------------------
+# In-process supervision: backoff, restart accounting, straggler abort.
+# ---------------------------------------------------------------------------
+
+def test_nonfatal_fault_restarts_with_backoff(tmp_path):
+    scheds = tuning.all_schedules(64)[:8]
+    base = sweep.sweep_schedules(KEY, scheds, DELAYS, N_TRIALS)
+    sleeps = []
+    rc = _rcfg(tmp_path, backoff_base=0.5, backoff_cap=2.0)
+    plan = FaultPlan(faults={1: SimulatedOOM(), 3: SimulatedOOM()})
+    rep = resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                    resilience=rc, fault_plan=plan,
+                                    sleep=sleeps.append)
+    _assert_same(rep.result, base)
+    assert rep.restarts == 2
+    assert len(rep.faults) == 2
+    assert len(sleeps) == 2 and sleeps[1] >= sleeps[0] > 0
+    # nothing recomputed: chunks done before each fault stayed in memory
+    assert rep.chunks_computed == N_TRIALS // 2
+
+
+def test_straggler_watchdog_restarts_chunk(tmp_path):
+    scheds = tuning.all_schedules(64)[:8]
+    base = sweep.sweep_schedules(KEY, scheds, DELAYS, N_TRIALS)
+    rc = _rcfg(tmp_path, straggler_factor=5.0, straggler_floor=0.0)
+    plan = FaultPlan(straggle={3: 3600.0})
+    rep = resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                    resilience=rc, fault_plan=plan,
+                                    sleep=_nosleep)
+    _assert_same(rep.result, base)
+    assert rep.restarts == 1
+    assert "chunk took" in rep.faults[0]
+    assert plan.exhausted
+
+
+def test_gives_up_after_max_restarts(tmp_path):
+    scheds = tuning.all_schedules(64)[:4]
+    rc = _rcfg(tmp_path, max_restarts=1)
+    plan = FaultPlan(faults={0: SimulatedOOM(), 1: SimulatedOOM(),
+                             2: SimulatedOOM()})
+    with pytest.raises(RuntimeError, match="giving up after 1"):
+        resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                  resilience=rc, fault_plan=plan,
+                                  sleep=_nosleep)
+
+
+def test_stale_store_from_different_run_is_wiped(tmp_path):
+    scheds = tuning.all_schedules(64)[:4]
+    rc = _rcfg(tmp_path)
+    rep1 = resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                     resilience=rc, sleep=_nosleep)
+    # a DIFFERENT key must not resume from this store
+    other = jax.random.PRNGKey(9)
+    base = sweep.sweep_schedules(other, scheds, DELAYS, N_TRIALS)
+    rep2 = resilient_sweep_schedules(other, scheds, DELAYS, N_TRIALS,
+                                     resilience=rc, sleep=_nosleep)
+    _assert_same(rep2.result, base)
+    assert rep2.chunks_resumed == 0, "stale chunks must not be reused"
+
+
+def test_corrupt_chunk_checkpoint_is_recomputed(tmp_path):
+    scheds = tuning.all_schedules(64)[:4]
+    rc = _rcfg(tmp_path)
+    base = sweep.sweep_schedules(KEY, scheds, DELAYS, N_TRIALS)
+    resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                              resilience=rc, sleep=_nosleep)
+    # tear one chunk's npz: resume must recompute it, not crash or trust
+    victim = tmp_path / "chunks" / "step_00000001" / "host_0000.npz"
+    victim.write_bytes(victim.read_bytes()[:64])
+    rep = resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                    resilience=rc, sleep=_nosleep)
+    _assert_same(rep.result, base)
+    assert rep.chunks_computed == 1 and rep.chunks_resumed == 3
+
+
+# ---------------------------------------------------------------------------
+# Tuner-grid wrappers reproduce their plain counterparts exactly.
+# ---------------------------------------------------------------------------
+
+def test_resilient_tune_barrier_matches_plain(tmp_path):
+    base = tuning.tune_barrier(KEY, 64, delays=DELAYS, n_trials=4,
+                               placements=("leaf_local", "central"))
+    rc = _rcfg(tmp_path)
+    plan = FaultPlan(faults={1: SimulatedOOM()})
+    rep = resilient_tune_barrier(KEY, 64, delays=DELAYS, n_trials=4,
+                                 placements=("leaf_local", "central"),
+                                 resilience=rc, fault_plan=plan,
+                                 sleep=_nosleep)
+    _assert_same(rep.result, base)
+    assert rep.result.names == base.names
+
+
+def test_resilient_sweep_workloads_matches_plain(tmp_path):
+    kernels = ("dotp_1Mi", "conv2d_256x256")
+    base = tuning.sweep_workloads(KEY, kernels, 64, n_trials=4)
+    rc = _rcfg(tmp_path)
+    plan = FaultPlan(faults={0: Preemption()})
+    with pytest.raises(SimulatedFault):
+        resilient_sweep_workloads(KEY, kernels, 64, n_trials=4,
+                                  resilience=rc, fault_plan=plan,
+                                  sleep=_nosleep)
+    rep = resilient_sweep_workloads(KEY, kernels, 64, n_trials=4,
+                                    resilience=rc, fault_plan=plan,
+                                    sleep=_nosleep)
+    _assert_same(rep.result, base)
+    assert rep.result.kernels == kernels
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-sharding under simulated device loss (8-device subprocess;
+# single-device hosts exercise the transparent fallback everywhere else).
+# ---------------------------------------------------------------------------
+
+def test_device_loss_single_device_insufficient(tmp_path):
+    scheds = tuning.all_schedules(64)[:4]
+    rc = _rcfg(tmp_path, min_devices=2)
+    if len(jax.devices()) > 1:
+        pytest.skip("single-device scenario")
+    plan = FaultPlan(faults={1: DeviceLoss(1)})
+    with pytest.raises(RuntimeError, match="survive"):
+        resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                  resilience=rc, fault_plan=plan,
+                                  sleep=_nosleep)
+
+
+def test_elastic_reshard_multidevice(tmp_path):
+    """8 host devices; a DeviceLoss(3) at chunk 1 shrinks the
+    schedule-axis mesh 8 -> 4 (5 survivors, 128 points), the sweep
+    continues, and the result — mixing full-mesh chunk 0 with
+    shrunken-mesh chunks — equals the unsharded run bit for bit.  A
+    second kill-then-resume on the shrunken mesh stays exact too, for
+    both sweep_schedules and sweep_arrivals grids."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + os.environ.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["RESILIENCE_TMP"] = str(tmp_path)
+    script = """
+import os
+import jax
+import numpy as np
+import pytest
+from repro.core import sweep, tuning, placement
+from repro.runtime import (DeviceLoss, FaultPlan, Preemption,
+                           ResilienceConfig, SimulatedFault,
+                           resilient_sweep_arrivals,
+                           resilient_sweep_schedules)
+
+assert len(jax.devices()) == 8, jax.devices()
+tmp = os.environ["RESILIENCE_TMP"]
+key = jax.random.PRNGKey(0)
+# 32 compositions x 4 strategies = 128 points: divisible by 8, 4, 2.
+scheds, placs = tuning._cross_placements(
+    tuning.all_schedules(64), placement.STRATEGIES, sweep.DEFAULT)
+base = sweep.sweep_schedules(key, scheds, (0.0, 512.0), 8,
+                             placements=placs, shard=False)
+
+rc = ResilienceConfig(ckpt_dir=tmp + "/sched", trial_chunk=2,
+                      backoff_base=0.0, backoff_cap=0.0)
+plan = FaultPlan(faults={1: DeviceLoss(3), 2: Preemption()})
+try:
+    resilient_sweep_schedules(key, scheds, (0.0, 512.0), 8,
+                              placements=placs, resilience=rc,
+                              fault_plan=plan, sleep=lambda s: None)
+    raise SystemExit("expected preemption")
+except SimulatedFault:
+    pass
+rep = resilient_sweep_schedules(key, scheds, (0.0, 512.0), 8,
+                                placements=placs, resilience=rc,
+                                fault_plan=plan, sleep=lambda s: None)
+np.testing.assert_array_equal(np.asarray(rep.result.span_cycles),
+                              np.asarray(base.span_cycles))
+np.testing.assert_array_equal(np.asarray(rep.result.exit_time),
+                              np.asarray(base.exit_time))
+np.testing.assert_array_equal(np.asarray(rep.result.mean_residency),
+                              np.asarray(base.mean_residency))
+assert rep.chunks_resumed == 2, rep      # chunks 0,1 from the killed run
+
+# arrivals grid: lose 4 devices mid-run, shrink 8 -> 4, stay exact
+arr = 300.0 * jax.random.uniform(key, (2, 8, 64))
+abase = sweep.sweep_arrivals(arr, scheds, placements=placs, shard=False)
+rc2 = ResilienceConfig(ckpt_dir=tmp + "/arr", trial_chunk=2,
+                       backoff_base=0.0, backoff_cap=0.0)
+plan2 = FaultPlan(faults={2: DeviceLoss(4)})
+arep = resilient_sweep_arrivals(arr, scheds, placements=placs,
+                                resilience=rc2, fault_plan=plan2,
+                                sleep=lambda s: None)
+np.testing.assert_array_equal(np.asarray(arep.result.span_cycles),
+                              np.asarray(abase.span_cycles))
+np.testing.assert_array_equal(np.asarray(arep.result.exit_time),
+                              np.asarray(abase.exit_time))
+assert arep.device_history == [8, 4], arep.device_history
+assert arep.restarts == 1, arep
+print("device history:", arep.device_history)
+print("elastic reshard ok")
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "elastic reshard ok" in r.stdout
+    assert "device history: [8, 4]" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Persistent schedule cache: process-level hits, corruption rejection.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def cache_env(tmp_path, monkeypatch):
+    monkeypatch.setenv(schedule_cache.CACHE_ENV, str(tmp_path / "cache"))
+    schedule_cache.reset_stats()
+    tuning.tuned_for_workload.cache_clear()
+    yield tmp_path / "cache"
+    tuning.tuned_for_workload.cache_clear()
+    schedule_cache.reset_stats()
+
+
+def test_schedule_cache_disabled_without_env(monkeypatch):
+    monkeypatch.delenv(schedule_cache.CACHE_ENV, raising=False)
+    assert schedule_cache.cache_dir() is None
+    assert schedule_cache.load(("k",)) is None
+    schedule_cache.store(("k",), {"x": 1})     # no-op, no crash
+
+
+def test_schedule_cache_roundtrip_and_hit(cache_env, monkeypatch):
+    sched, plc = tuning.tuned_for_workload("dotp_1Mi", 64)
+    assert schedule_cache.STATS["stores"] == 1
+    tuning.tuned_for_workload.cache_clear()
+    # sabotage the tuner: a disk hit must perform ZERO recomputation
+    monkeypatch.setattr(
+        tuning, "tune_for_workload",
+        lambda *a, **k: pytest.fail("cache hit must not re-sweep"))
+    sched2, plc2 = tuning.tuned_for_workload("dotp_1Mi", 64)
+    assert (sched2, plc2) == (sched, plc)
+    assert schedule_cache.STATS["hits"] == 1
+
+
+def test_schedule_cache_detects_corruption(cache_env):
+    sched, plc = tuning.tuned_for_workload(
+        "dotp_1Mi", 64, placements=("leaf_local", "central"))
+    tuning.tuned_for_workload.cache_clear()
+    entry = next(cache_env.glob("*.json"))
+    # bit-flip INSIDE the payload: still valid JSON, wrong checksum
+    data = json.loads(entry.read_text())
+    data["payload"]["schedule"]["sizes"][0] = 999
+    entry.write_text(json.dumps(data))
+    sched2, plc2 = tuning.tuned_for_workload(
+        "dotp_1Mi", 64, placements=("leaf_local", "central"))
+    assert schedule_cache.STATS["corrupt"] == 1
+    assert (sched2, plc2) == (sched, plc), "corrupt entry must recompute"
+    # the rewritten entry now round-trips
+    tuning.tuned_for_workload.cache_clear()
+    sched3, plc3 = tuning.tuned_for_workload(
+        "dotp_1Mi", 64, placements=("leaf_local", "central"))
+    assert (sched3, plc3) == (sched, plc)
+    assert schedule_cache.STATS["hits"] == 1
+
+
+def test_schedule_cache_truncated_entry(cache_env):
+    sched, plc = tuning.tuned_for_workload("conv2d_256x256", 64)
+    tuning.tuned_for_workload.cache_clear()
+    entry = next(cache_env.glob("*.json"))
+    entry.write_text(entry.read_text()[:37])
+    sched2, plc2 = tuning.tuned_for_workload("conv2d_256x256", 64)
+    assert (sched2, plc2) == (sched, plc)
+    assert schedule_cache.STATS["corrupt"] == 1
+
+
+def test_schedule_cache_key_separation(cache_env):
+    s64, _ = tuning.tuned_for_workload("dotp_1Mi", 64)
+    s256, _ = tuning.tuned_for_workload("dotp_1Mi", 256)
+    assert len(list(cache_env.glob("*.json"))) == 2
+    assert s64.n_pes == 64 and s256.n_pes == 256
+
+
+def test_fiveg_modes_read_through_cache(cache_env, monkeypatch):
+    from repro.core import fiveg
+    from repro.core.topology import TeraPoolConfig
+    cfg = TeraPoolConfig(n_pes=64)
+    sched = fiveg._tuned_schedule(64, 100.0, False, cfg)
+    pair = fiveg._placed_schedule(64, 100.0, cfg)
+    fiveg._tuned_schedule.cache_clear()
+    fiveg._placed_schedule.cache_clear()
+    monkeypatch.setattr(tuning, "best_schedule",
+                        lambda *a, **k: pytest.fail("must hit disk"))
+    monkeypatch.setattr(tuning, "best_placed_schedule",
+                        lambda *a, **k: pytest.fail("must hit disk"))
+    assert fiveg._tuned_schedule(64, 100.0, False, cfg) == sched
+    assert fiveg._placed_schedule(64, 100.0, cfg) == pair
+
+
+def test_code_version_is_stable():
+    assert schedule_cache.code_version() == schedule_cache.code_version()
+    assert len(schedule_cache.code_version()) == 16

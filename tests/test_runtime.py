@@ -1,0 +1,227 @@
+"""Runtime resilience primitives: elastic mesh shrinking (2-D data x
+model and the 1-D schedule axis), the fault-tolerant runner's straggler
+watchdog and restart-from-checkpoint semantics, supervisor backoff +
+history carry, and checkpoint-store robustness (corrupt manifests,
+stale .tmp pruning) — the previously untested seed modules the
+resilient sweep runtime is built on."""
+import json
+import os
+import time
+from pathlib import Path
+
+import pytest
+
+from repro import checkpoint
+from repro.runtime import elastic, fault
+from repro.runtime.fault import (FaultConfig, FaultTolerantRunner,
+                                 StragglerAbort, backoff_delay, supervise)
+
+
+# ---------------------------------------------------------------------------
+# elastic.viable_mesh_shape / viable_schedule_devices edge cases.
+# ---------------------------------------------------------------------------
+
+def test_viable_mesh_shape_non_power_of_two_survivors():
+    # 7 survivors, TP=2: 3 data ranks round down to the pow2 2.
+    assert elastic.viable_mesh_shape(7, model_parallel=2) == (2, 2)
+    # 6 survivors, TP=4: one data rank survives.
+    assert elastic.viable_mesh_shape(6, model_parallel=4) == (1, 4)
+
+
+def test_viable_mesh_shape_exactly_minimum():
+    assert elastic.viable_mesh_shape(4, model_parallel=4) == (1, 4)
+    assert elastic.viable_mesh_shape(8, model_parallel=2,
+                                     min_data=4) == (4, 2)
+
+
+def test_viable_mesh_shape_insufficient():
+    assert elastic.viable_mesh_shape(3, model_parallel=4) is None
+    assert elastic.viable_mesh_shape(7, model_parallel=2,
+                                     min_data=4) is None
+
+
+def test_viable_schedule_devices_divisibility():
+    devs = list(range(8))
+    # 8 divides 128: the full mesh survives.
+    assert elastic.viable_schedule_devices(devs, 128) == tuple(range(8))
+    # 6 survivors, 128 points: 6 and 5 don't divide, 4 does.
+    assert elastic.viable_schedule_devices(devs[:6], 128) == (0, 1, 2, 3)
+    # prime-sized stack: only 1 device divides -> unsharded fallback.
+    assert elastic.viable_schedule_devices(devs[:6], 127) == (0,)
+
+
+def test_viable_schedule_devices_minimum_and_insufficient():
+    devs = list(range(4))
+    assert elastic.viable_schedule_devices(devs, 128,
+                                           min_devices=4) == (0, 1, 2, 3)
+    # 3 survivors can't host a 4-device floor.
+    assert elastic.viable_schedule_devices(devs[:3], 128,
+                                           min_devices=4) is None
+    # indivisible above the floor: no viable mesh either.
+    assert elastic.viable_schedule_devices(devs, 126,
+                                           min_devices=4) is None
+    with pytest.raises(ValueError, match="non-empty schedule axis"):
+        elastic.viable_schedule_devices(devs, 0)
+
+
+def test_rescale_batch_keeps_per_device_constant():
+    assert elastic.rescale_batch(64, old_data=8, new_data=6) == 48
+
+
+# ---------------------------------------------------------------------------
+# backoff_delay: exponential, jitter-capped, deterministic.
+# ---------------------------------------------------------------------------
+
+def test_backoff_delay_grows_and_caps():
+    delays = [backoff_delay(k, base=0.1, cap=5.0, jitter=0.0)
+              for k in range(10)]
+    assert delays[0] == pytest.approx(0.1)
+    assert all(b >= a for a, b in zip(delays, delays[1:]))
+    assert delays[-1] == 5.0
+
+
+def test_backoff_delay_jitter_bounded_and_deterministic():
+    for k in range(6):
+        raw = min(5.0, 0.1 * 2 ** k)
+        d = backoff_delay(k, base=0.1, cap=5.0, jitter=0.25)
+        assert raw <= d <= min(5.0, raw * 1.25)
+        assert d == backoff_delay(k, base=0.1, cap=5.0, jitter=0.25)
+
+
+# ---------------------------------------------------------------------------
+# FaultTolerantRunner: watchdog + restart-resumes-from-checkpoint.
+# ---------------------------------------------------------------------------
+
+def _counter_runner(tmp_path, *, fail_at=None, failures=None,
+                    ckpt_every=2, executed=None):
+    """A runner whose state counts executed steps; ``fail_at`` raises
+    once per entry in ``failures`` (a mutable set) to simulate faults."""
+    cfg = FaultConfig(ckpt_dir=str(tmp_path / "ckpt"),
+                      ckpt_every=ckpt_every,
+                      backoff_base=0.0, backoff_cap=0.0)
+
+    def step_fn(state, batch):
+        if failures is not None and batch in failures:
+            failures.remove(batch)
+            raise RuntimeError(f"node fault at step {batch}")
+        if executed is not None:
+            executed.append(batch)
+        return state + 1, {"step": batch}
+
+    return FaultTolerantRunner(cfg, step_fn=step_fn, batch_fn=lambda s: s,
+                               state_template=0)
+
+
+def test_runner_restart_resumes_from_checkpoint(tmp_path):
+    executed = []
+    failures = {3}
+    make = lambda: _counter_runner(tmp_path, failures=failures,
+                                   executed=executed)
+    cfg = make().cfg
+    state = supervise(make, 6, cfg, sleep=lambda s: None)
+    # ckpt at steps 1, 3(never: failed), so restart resumes at step 2:
+    # attempt 1 runs 0,1,2 (fault at 3), attempt 2 runs 2..5.
+    assert executed == [0, 1, 2, 2, 3, 4, 5]
+    # state restored from the step-1 checkpoint counts steps 2..5 only.
+    assert state == 2 + 4
+
+
+def test_supervise_carries_history_and_backs_off(tmp_path):
+    sleeps = []
+    failures = {3}
+    make = lambda: _counter_runner(tmp_path, failures=failures)
+    holder = []
+
+    def make_and_keep():
+        r = make()
+        holder.append(r)
+        return r
+
+    cfg = FaultConfig(ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=2,
+                      backoff_base=0.5, backoff_cap=2.0,
+                      backoff_jitter=0.25)
+    supervise(make_and_keep, 6, cfg, sleep=sleeps.append)
+    # one restart -> one backoff sleep, the attempt-0 delay
+    assert sleeps == [backoff_delay(0, base=0.5, cap=2.0, jitter=0.25)]
+    # the failed attempt's steps (0,1,2) survive in the final history
+    final = holder[-1].history
+    assert [s.step for s in final] == [0, 1, 2, 2, 3, 4, 5]
+
+
+def test_supervise_gives_up_after_max_restarts(tmp_path):
+    cfg = FaultConfig(ckpt_dir=str(tmp_path / "ckpt"), max_restarts=2,
+                      backoff_base=0.0, backoff_cap=0.0)
+
+    def make():
+        return FaultTolerantRunner(
+            cfg, step_fn=lambda s, b: (_ for _ in ()).throw(
+                RuntimeError("always down")),
+            batch_fn=lambda s: s, state_template=0)
+
+    with pytest.raises(RuntimeError, match="giving up after 2"):
+        supervise(make, 4, cfg, sleep=lambda s: None)
+
+
+def test_straggler_watchdog_triggers():
+    cfg = FaultConfig(straggler_factor=3.0, max_stragglers=2)
+    runner = FaultTolerantRunner(cfg, step_fn=lambda s, b: (s, {}),
+                                 batch_fn=lambda s: s, state_template=0)
+    for _ in range(8):
+        runner._watch(0.01)          # healthy baseline
+    runner._watch(1.0)               # 1st slow step: counted
+    with pytest.raises(StragglerAbort, match="2 consecutive"):
+        runner._watch(1.0)           # 2nd consecutive: abort
+
+
+def test_straggler_watchdog_resets_on_fast_step():
+    cfg = FaultConfig(straggler_factor=3.0, max_stragglers=2)
+    runner = FaultTolerantRunner(cfg, step_fn=lambda s, b: (s, {}),
+                                 batch_fn=lambda s: s, state_template=0)
+    for _ in range(8):
+        runner._watch(0.01)
+    runner._watch(1.0)
+    runner._watch(0.01)              # recovery resets the streak
+    runner._watch(1.0)               # a lone slow step never aborts
+    assert runner._slow == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store robustness: corrupt manifests + stale .tmp pruning.
+# ---------------------------------------------------------------------------
+
+def test_latest_step_skips_truncated_manifest(tmp_path):
+    checkpoint.save(tmp_path, 3, {"w": 1.5})
+    checkpoint.save(tmp_path, 7, {"w": 2.5})
+    # torn write: manifest exists but is truncated mid-JSON
+    (tmp_path / "step_00000007" / "manifest.json").write_text(
+        '{"step": 7, "keys": ["w"')
+    assert checkpoint.latest_step(tmp_path) == 3
+    # unparseable garbage is equally invisible
+    (tmp_path / "step_00000007" / "manifest.json").write_bytes(
+        b"\xff\xfe not json")
+    assert checkpoint.latest_step(tmp_path) == 3
+    # and a manifest without a step field does not count either
+    (tmp_path / "step_00000007" / "manifest.json").write_text("[1, 2]")
+    assert checkpoint.latest_step(tmp_path) == 3
+
+
+def test_prune_drops_stale_tmp_dirs(tmp_path):
+    checkpoint.save(tmp_path, 1, {"w": 1.0})
+    stale = tmp_path / "step_00000009.tmp"
+    fresh = tmp_path / "step_00000010.tmp"
+    stale.mkdir()
+    fresh.mkdir()
+    old = time.time() - 7200
+    os.utime(stale, (old, old))
+    checkpoint.prune(tmp_path, keep=3)
+    assert not stale.exists(), "stale .tmp (>1h) must be reaped"
+    assert fresh.exists(), "in-flight .tmp must survive"
+    assert (tmp_path / "step_00000001").exists()
+
+
+def test_prune_keeps_newest_complete(tmp_path):
+    for s in (1, 2, 3, 4):
+        checkpoint.save(tmp_path, s, {"w": float(s)})
+    checkpoint.prune(tmp_path, keep=2)
+    left = sorted(d.name for d in tmp_path.iterdir())
+    assert left == ["step_00000003", "step_00000004"]
