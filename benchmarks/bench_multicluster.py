@@ -1,0 +1,217 @@
+"""Multi-cluster scale-out benchmark: hierarchical barriers at
+2048-16384 PEs through the generalized telescope core.
+
+Three headline measurements per machine size, written to
+``BENCH_multicluster.json`` at the repo root:
+
+* **Sweep throughput** — the joint intra-cluster x inter-cluster
+  schedule space (:func:`repro.core.tuning.multicluster_schedules`)
+  plus the flat baselines, swept through the one-compile engine;
+  steady-state us per grid point.
+* **Hierarchical vs flat** — simulated span cycles of the best
+  hierarchical multi-cluster tree against the flat central-counter
+  barrier (every PE hammering one remote bank) and the best
+  cluster-oblivious uniform radix, on the same arrival draws.  The
+  paper's Sec. 5 fine-tuning argument, reproduced at scale-out size.
+* **2-D vs schedule-only sharding** — wall-clock of the same
+  ``sweep_arrivals`` grid under the 2-D (schedule x kernel) device
+  mesh versus the largest schedule-only mesh, with the visible-device
+  and physical-core counts recorded alongside (on a single physical
+  CPU the fake-device meshes time-slice one core, so the honest win
+  to watch there is device *coverage*, not wall-clock).
+* **Width-table speedup** — the telescope core under the generalized
+  cumulative-quotient widths versus the conservative ``N >> i``
+  fallback on the same hierarchical stack: the pure win from this
+  PR's per-schedule width derivation.
+
+Environment knobs (CI smoke uses both):
+  * ``REPRO_BENCH_MC_NS``        — comma-separated TOTAL PE counts
+    (default ``2048,4096,16384``; CI runs 128).
+  * ``BENCH_MULTICLUSTER_JSON``  — output path (default
+    ``<repo>/BENCH_multicluster.json``).
+"""
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import barrier, sweep, tuning
+from repro.core.topology import TeraPoolConfig, multi_cluster
+
+from . import timing
+
+KEY = jax.random.PRNGKey(0)
+N_CLUSTERS = 4
+DELAYS = (0.0, 512.0)
+N_TRIALS = 4
+N_KERNELS = 8
+# Beyond this many joint compositions, fall back to the curated stack
+# (uniform-radix intra shapes + the hierarchy-segment tree) so 16384-PE
+# tables stay memory-bounded.
+MAX_STACK = 192
+
+_NS = tuple(int(x) for x in os.environ.get(
+    "REPRO_BENCH_MC_NS", "2048,4096,16384").split(","))
+_OUT = Path(os.environ.get(
+    "BENCH_MULTICLUSTER_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_multicluster.json"))
+
+
+def _machine(n_total: int):
+    return multi_cluster(TeraPoolConfig(n_pes=n_total // N_CLUSTERS),
+                         n_clusters=N_CLUSTERS)
+
+
+def _hier_schedules(cfg):
+    """The joint hierarchical space, curated down when it outgrows the
+    memory budget."""
+    full = tuning.multicluster_compositions(cfg)
+    if len(full) <= MAX_STACK:
+        comps = full
+    else:
+        ppc = cfg.pes_per_cluster
+        intra = [tuple(barrier.kary_tree(r, n_pes=ppc, cfg=cfg).sizes)
+                 for r in (2, 4, 8, 16) if ppc % r == 0]
+        intra.append(tuple(tuning._hier_segments(ppc, cfg)))
+        comps = tuning.multicluster_compositions(
+            cfg, intra=sorted(set(intra)))
+    return [barrier.mixed_radix_tree(c, cfg=cfg) for c in comps]
+
+
+def _flat_schedules(cfg):
+    """Cluster-oblivious baselines: the central counter and the best-N
+    uniform radices over the whole machine."""
+    flats = [barrier.mixed_radix_tree((cfg.n_pes,), cfg=cfg)]
+    for r in (4, 8, 16):
+        if cfg.n_pes % r == 0:
+            flats.append(barrier.kary_tree(r, n_pes=cfg.n_pes, cfg=cfg))
+    return flats
+
+
+def _bench_machine(n_total: int, rows: list) -> dict:
+    cfg = _machine(n_total)
+    hier = _hier_schedules(cfg)
+    flats = _flat_schedules(cfg)
+    stack = hier + flats
+
+    # -- sweep throughput + hier-vs-flat spans (one swept grid) ----------
+    res, steady_us, compile_us = timing.measure(
+        lambda: sweep.sweep_schedules(
+            KEY, stack, delays=DELAYS, n_trials=N_TRIALS,
+            cfg=cfg).span_cycles, iters=2)
+    n_points = len(stack) * len(DELAYS) * N_TRIALS
+    spans = jnp.mean(res, axis=-1)            # (S, D)
+    # Span at delay 0 (simultaneous arrival): the contention-dominated
+    # regime where the central counter serializes all N atomics on one
+    # remote bank and tree shape matters most.
+    hier_best = float(jnp.min(spans[:len(hier), 0]))
+    central = float(spans[len(hier), 0])
+    flat_uniform_best = float(jnp.min(spans[len(hier):, 0]))
+    entry = {
+        "n_pes": n_total,
+        "n_clusters": N_CLUSTERS,
+        "n_schedules": len(stack),
+        "sweep": {
+            "points": n_points,
+            "steady_us": round(steady_us, 1),
+            "compile_us": round(compile_us, 1),
+            "us_per_point": round(steady_us / n_points, 3),
+        },
+        "hier_vs_flat": {
+            "hier_best_span": round(hier_best, 1),
+            "central_span": round(central, 1),
+            "uniform_best_span": round(flat_uniform_best, 1),
+            "speedup_vs_central": round(central / hier_best, 2),
+            "speedup_vs_uniform": round(flat_uniform_best / hier_best, 2),
+        },
+    }
+    rows.append((f"mc_sweep_N{n_total}", steady_us / n_points,
+                 f"{n_points}pts", compile_us))
+    rows.append((f"mc_hier_vs_central_N{n_total}", 0.0,
+                 entry["hier_vs_flat"]["speedup_vs_central"], 0.0))
+
+    # -- 2-D vs schedule-only sharding on an arrival grid ----------------
+    devs = jax.devices()
+    sub = hier[:4] if len(hier) >= 4 else hier
+    arrivals = jax.random.uniform(
+        KEY, (N_KERNELS, N_TRIALS, cfg.n_pes), jnp.float32, 0.0, 512.0)
+    ds, dk = sweep._mesh_shape(len(devs), len(sub), N_KERNELS)
+    sched_only = sweep._grid_devices(len(sub), True, devs)
+    timed = {}
+    for label, kwargs in (
+            ("grid_2d", dict(shard=True)),
+            ("sched_only", dict(shard=True,
+                                devices=devs[:ds] if sched_only is None
+                                else sched_only)),
+            ("unsharded", dict(shard=False))):
+        _, t_us, c_us = timing.measure(
+            lambda kw=kwargs: sweep.sweep_arrivals(
+                arrivals, sub, cfg=cfg, **kw).span_cycles, iters=2)
+        timed[label] = {"steady_us": round(t_us, 1),
+                        "compile_us": round(c_us, 1)}
+    timed["grid_2d"]["mesh"] = [ds, dk]
+    timed["sched_only"]["mesh"] = [ds, 1]
+    entry["sharding"] = {
+        "n_devices": len(devs),
+        "physical_cpus": os.cpu_count(),
+        "n_schedules": len(sub),
+        "n_kernels": N_KERNELS,
+        "devices_used_2d": ds * dk,
+        "devices_used_sched_only": ds,
+        "speedup_2d_vs_sched_only": round(
+            timed["sched_only"]["steady_us"]
+            / timed["grid_2d"]["steady_us"], 2),
+        **timed,
+    }
+    rows.append((f"mc_shard2d_N{n_total}",
+                 timed["grid_2d"]["steady_us"],
+                 f"{ds}x{dk}mesh", timed["grid_2d"]["compile_us"]))
+
+    # -- generalized vs fallback telescope widths ------------------------
+    # Measured on the hierarchy-matched stack: its cumulative-quotient
+    # widths shrink by the real level sizes (8x, 16x, ...), where the
+    # fallback only halves.  (The full sweep stack above contains
+    # radix-2 compositions whose widths ARE the fallback, so its
+    # stacked maximum cannot tighten by construction.)
+    hseg = tuning.multicluster_compositions(
+        cfg, intra=[tuple(tuning._hier_segments(cfg.pes_per_cluster,
+                                                cfg))])
+    tables = barrier.stack_tables(
+        [barrier.mixed_radix_tree(c, cfg=cfg) for c in hseg], cfg)
+    one = jax.random.uniform(KEY, (cfg.n_pes,), jnp.float32, 0.0, 512.0)
+    tight = barrier.telescope_widths(tables, cfg.n_pes)
+    loose = barrier.default_widths(cfg.n_pes, len(tight) - 1)
+    per_width = {}
+    for label, w in (("tight", tight), ("fallback", loose)):
+        _, t_us, c_us = timing.measure(
+            lambda w=w: sweep._schedule_stack(
+                tables, one, cfg, "telescope", w).span_cycles, iters=2)
+        per_width[label] = {"steady_us": round(t_us, 1),
+                            "compile_us": round(c_us, 1)}
+    entry["widths"] = {
+        "sum_tight": int(sum(tight)),
+        "sum_fallback": int(sum(loose)),
+        "speedup": round(per_width["fallback"]["steady_us"]
+                         / per_width["tight"]["steady_us"], 2),
+        **per_width,
+    }
+    rows.append((f"mc_widths_N{n_total}", per_width["tight"]["steady_us"],
+                 entry["widths"]["speedup"],
+                 per_width["tight"]["compile_us"]))
+    return entry
+
+
+def run():
+    rows = []
+    record = {}
+    for n in _NS:
+        record[f"N={n}"] = _bench_machine(n, rows)
+    _OUT.write_text(json.dumps(record, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

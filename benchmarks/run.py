@@ -9,8 +9,8 @@ import sys
 
 
 def main() -> None:
-    from . import (bench_core, bench_resilience, collectives_bench,
-                   fig4_random_delay, fig5_kernel_cdf,
+    from . import (bench_core, bench_multicluster, bench_resilience,
+                   collectives_bench, fig4_random_delay, fig5_kernel_cdf,
                    fig6_kernel_colormap, fig7_5g_app, fig_placement,
                    fig_tuned_tree, fig_workload_tuned, roofline_table)
     mods = [("fig4", fig4_random_delay), ("fig5", fig5_kernel_cdf),
@@ -19,6 +19,7 @@ def main() -> None:
             ("placement", fig_placement),
             ("workload", fig_workload_tuned),
             ("core", bench_core),
+            ("multicluster", bench_multicluster),
             ("collectives", collectives_bench),
             ("resilience", bench_resilience),
             ("roofline", roofline_table)]

@@ -31,6 +31,7 @@ from typing import List, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .topology import DEFAULT, TeraPoolConfig
 
@@ -78,14 +79,26 @@ def _check_pow2(x: int, name: str) -> None:
         raise ValueError(f"{name} must be a power of two >= 2, got {x}")
 
 
+def _check_size(x: int, name: str) -> None:
+    """Level sizes are any integer >= 2: non-power-of-two clusters
+    (768-PE / 12-Tile, asymmetric multi-cluster shapes) factor into
+    levels like 3 or 12 that the generalized telescope widths handle
+    exactly (:func:`telescope_widths`)."""
+    if x < 2:
+        raise ValueError(f"{name} must be an integer >= 2, got {x}")
+
+
 def mixed_radix_tree(sizes: Sequence[int], n_pes: int | None = None,
                      cfg: TeraPoolConfig = DEFAULT, *,
                      partial: bool = False) -> BarrierSchedule:
     """Build the arrival tree with per-level group ``sizes`` (leaf level
     first).  The whole schedule design space in one constructor: every
-    composition of ``log2(N)`` into power-of-two level sizes is a valid
-    tree, including all uniform radices and the hierarchy-matched
-    compositions (e.g. ``(8, 16, 8)`` = Tile/Group/Cluster).
+    ordered factorization of ``N`` into level sizes >= 2 is a valid
+    tree — all uniform radices, the hierarchy-matched compositions
+    (e.g. ``(8, 16, 8)`` = Tile/Group/Cluster), non-power-of-two
+    factors (``(8, 12, 8)`` for a 768-PE / 12-Tile cluster) and
+    hierarchical multi-cluster stacks (``(8, 16, 8, 4)`` = intra tree
+    x inter-cluster tree).
 
     Per-level spans are cumulative products of the sizes; each level's
     counter latency follows from the locality class of its span
@@ -95,7 +108,7 @@ def mixed_radix_tree(sizes: Sequence[int], n_pes: int | None = None,
     if not sizes:
         raise ValueError("schedule needs at least one level")
     for g in sizes:
-        _check_pow2(g, "level size")
+        _check_size(g, "level size")
     n = math.prod(sizes)
     if n_pes is not None and int(n_pes) != n:
         raise ValueError(
@@ -124,21 +137,29 @@ def kary_tree(radix: int, n_pes: int | None = None,
               partial: bool = False) -> BarrierSchedule:
     """The uniform-radix arrival tree for ``n_pes`` cores.
 
-    ``n_levels = ceil(log_k N)``; the first level synchronizes
-    ``N / k**(n_levels-1)`` PEs so the remaining levels are exactly
-    radix-k (paper Sec. 3: "adapted ... by synchronizing a number of PEs
-    different from the radix of the tree in the first step").
+    The tail levels are exactly radix-k — ``e`` of them, where ``e`` is
+    the largest exponent with ``k**e`` dividing ``N`` — and the first
+    level synchronizes the leftover ``N / k**e`` PEs (paper Sec. 3:
+    "adapted ... by synchronizing a number of PEs different from the
+    radix of the tree in the first step").  For power-of-two ``N`` this
+    reproduces the classic ``ceil(log_k N)``-level shape bit-for-bit;
+    for non-power-of-two ``N`` (e.g. 768) the odd factor lands in the
+    adapted first level (``768 = 3 x 4^4`` for ``k = 4``).
     """
     n = int(n_pes if n_pes is not None else cfg.n_pes)
     k = int(radix)
-    _check_pow2(n, "n_pes")
-    _check_pow2(k, "radix")
+    _check_size(n, "n_pes")
+    _check_size(k, "radix")
     if k > n:
         raise ValueError(f"radix {k} exceeds n_pes {n}")
 
-    n_levels = math.ceil(math.log(n) / math.log(k))
-    first = n // (k ** (n_levels - 1))
-    sizes: List[int] = [first] + [k] * (n_levels - 1)
+    e = 0
+    while n % (k ** (e + 1)) == 0:
+        e += 1
+    if e == 0:
+        raise ValueError(f"radix {k} does not divide n_pes {n}")
+    first = n // (k ** e)
+    sizes: List[int] = ([k] * e if first == 1 else [first] + [k] * e)
     return mixed_radix_tree(sizes, n_pes=n, cfg=cfg, partial=partial)
 
 
@@ -160,9 +181,11 @@ def partial_barrier(group_pes: int, radix: int,
 
 def all_radices(n_pes: int | None = None,
                 cfg: TeraPoolConfig = DEFAULT) -> Sequence[int]:
-    """All power-of-two radices 2..N (N == central counter)."""
+    """Every valid uniform radix: the divisors >= 2 of ``N`` (for
+    power-of-two ``N`` this is exactly the powers of two 2..N;
+    ``k == N`` is the central counter)."""
     n = int(n_pes if n_pes is not None else cfg.n_pes)
-    return [1 << i for i in range(1, int(math.log2(n)) + 1)]
+    return [k for k in range(2, n + 1) if n % k == 0]
 
 
 # ---------------------------------------------------------------------------
@@ -278,28 +301,41 @@ def validate_tail_padding(table: LevelTable, *,
     columns — the cheap per-call guard ``simulate_table`` applies to
     tables it did not build itself.
 
+    The check covers power-of-two AND non-power-of-two schedules alike
+    (the survivor bound is cumulative-quotient based, not ``N / 2**i``;
+    see :func:`telescope_widths`), and error messages name the
+    offending table row, level index and group size so a bad entry in
+    a big stacked sweep is locatable directly.
+
     Returns the table unchanged, for call-site chaining.
     """
-    import numpy as np
     if isinstance(table.group_sizes, jax.core.Tracer):
         return table
     depth = table.group_sizes.shape[-1]
-    pad = np.asarray(table.group_sizes).reshape((-1, depth)) == 1
+    sizes = np.asarray(table.group_sizes).reshape((-1, depth))
+    pad = sizes == 1
     # padding must be a suffix: no real level (g >= 2) after a g == 1
-    if np.any(pad[:, :-1] & ~pad[:, 1:]):
+    bad = pad[:, :-1] & ~pad[:, 1:]
+    if np.any(bad):
+        row, lvl = (int(x) for x in np.argwhere(bad)[0])
         raise ValueError(
-            "level table has identity padding (group size 1) before a "
-            "real level; canonical tables are tail-padded only — build "
-            "them with level_table()/stack_tables()")
+            f"level table row {row} has identity padding (group size 1) "
+            f"at level {lvl} before a real level {lvl + 1} (group size "
+            f"{int(sizes[row, lvl + 1])}); canonical tables are "
+            f"tail-padded only — build them with "
+            f"level_table()/stack_tables()")
     if not full:
         return table
     width = table.latencies.shape[-1]
     lat = np.asarray(table.latencies).reshape((-1, depth, width))
     ins = np.asarray(table.instr_cycles).reshape((-1, depth))
-    if np.any(lat[pad] != 0.0) or np.any(ins[pad] != 0.0):
+    bad = pad & (np.any(lat != 0.0, axis=-1) | (ins != 0.0))
+    if np.any(bad):
+        row, lvl = (int(x) for x in np.argwhere(bad)[0])
         raise ValueError(
-            "identity padding levels must carry zero latency and zero "
-            "instruction overhead")
+            f"level table row {row}, padding level {lvl} (of width "
+            f"{width}): identity padding levels must carry zero latency "
+            f"and zero instruction overhead")
     return table
 
 
@@ -312,6 +348,46 @@ def counter_width(n_pes: int) -> int:
     """Most counters any level of a tree over ``n_pes`` cores can have:
     the leaf level of the radix-2 tree, ``n_pes // 2``."""
     return max(1, n_pes // 2)
+
+
+def default_widths(n_pes: int, depth: int) -> tuple:
+    """The conservative per-step telescope widths ``max(1, N >> i)``:
+    valid for ANY canonical table over ``n_pes`` cores (every real
+    level at least halves the live count, so the floor-of-halving
+    bound holds for non-power-of-two ``N`` too).  Used when the stacked
+    group sizes are traced data (e.g. the 5G app core) and the exact
+    cumulative quotients cannot be read off on the host."""
+    return tuple(max(1, n_pes >> i) for i in range(depth + 1))
+
+
+def telescope_widths(table: LevelTable, n_pes: int) -> tuple | None:
+    """Exact per-step entry widths for the telescoping core: entry
+    ``i`` bounds the survivors alive entering step ``i``.
+
+    For one schedule the live count entering level ``i`` is exactly
+    ``N // (g_0 * ... * g_{i-1})`` (floored division composes:
+    ``(N // a) // b == N // (a * b)``, and the cumulative products of a
+    full schedule divide ``N`` exactly) — the *cumulative quotient*.
+    For a stacked table the width is the max over stacked rows, so one
+    widths tuple serves the whole sweep and the one-compile property
+    is untouched.  This is far tighter than the ``N >> i`` bound for
+    hierarchy-shaped stacks: a leaf level of 8 shrinks the window 8x
+    in one step instead of 2x, cutting the sort volume of the unrolled
+    pyramid by ~2x at N=4096 (benchmarks/bench_multicluster.py).
+
+    Returns ``None`` for traced tables — callers then fall back to
+    :func:`default_widths` inside the core.
+    """
+    if isinstance(table.group_sizes, jax.core.Tracer):
+        return None
+    n = int(n_pes)
+    depth = table.group_sizes.shape[-1]
+    sizes = np.asarray(table.group_sizes, np.int64).reshape((-1, depth))
+    cum = np.cumprod(sizes, axis=1)
+    widths = [n]
+    for i in range(depth):
+        widths.append(int(max(1, np.max(n // cum[:, i]))))
+    return tuple(widths)
 
 
 @functools.lru_cache(maxsize=None)

@@ -22,15 +22,21 @@ Three implementations share the model:
   The schedule is encoded as a fixed-shape, identity-padded
   :class:`~repro.core.barrier.LevelTable` and the level walk is a
   statically unrolled *telescoping pyramid*: step ``i`` touches only
-  the first ``N / 2**i`` lanes.  Because every real level has group
-  size >= 2 and identity padding is tail-only (the canonicalized-table
-  invariant, :func:`repro.core.barrier.validate_tail_padding`), at most
-  ``N / 2**i`` survivors can be live entering step ``i`` — so the
-  per-level sort shrinks geometrically and total sort work drops from
-  ``O(N log N · log N)`` (full width at every level) to ``O(N log N)``
-  summed over levels.  All step shapes depend on ``N`` alone, never on
-  the schedule, so the one-compile property over schedule x placement
-  x delay grids is preserved.
+  the first ``widths[i]`` lanes, where ``widths`` is the cumulative-
+  quotient survivor bound of the stacked schedules
+  (:func:`repro.core.barrier.telescope_widths`; the conservative
+  ``max(1, N >> i)`` fallback applies when the stack is traced data).
+  Because every real level has group size >= 2 and identity padding is
+  tail-only (the canonicalized-table invariant,
+  :func:`repro.core.barrier.validate_tail_padding`), the bound is
+  sound for power-of-two and non-power-of-two compositions alike — so
+  the per-level sort shrinks geometrically (or faster, for hierarchy-
+  shaped stacks whose coarse leaf levels collapse the window 8-16x per
+  step) and total sort work drops from ``O(N log N · log N)`` (full
+  width at every level) to ``O(N log N)`` summed over levels.  Step
+  shapes depend only on ``N`` and the per-stack widths tuple, never on
+  which schedule in the stack is simulated, so the one-compile
+  property over schedule x placement x delay grids is preserved.
 * :func:`_scan_core` — the previous production path (``core="scan"``),
   a single jitted ``lax.scan`` at full width per level.  Kept as a
   bit-for-bit oracle for the telescoped core and selectable everywhere
@@ -53,8 +59,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .barrier import (BarrierSchedule, LevelTable, level_table,
-                      validate_tail_padding)
+from .barrier import (BarrierSchedule, LevelTable, default_widths,
+                      level_table, telescope_widths, validate_tail_padding)
 from .topology import DEFAULT, TeraPoolConfig
 
 
@@ -138,8 +144,13 @@ def _segmented_cummax(x: jnp.ndarray, is_start: jnp.ndarray) -> jnp.ndarray:
 
 
 def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
-               cfg: TeraPoolConfig) -> BarrierResult:
+               cfg: TeraPoolConfig, widths: tuple | None = None
+               ) -> BarrierResult:
     """One barrier episode as a ``lax.scan`` over the padded level table.
+
+    ``widths`` is accepted for signature parity with
+    :func:`_telescope_core` and ignored: the scan core always runs at
+    full width, which is what makes it the width-independent oracle.
 
     The carried state keeps a fixed shape across levels: ``ready`` is
     always ``(n_pes,)``, with the ``m`` current survivors compacted into
@@ -223,20 +234,28 @@ def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
 # ---------------------------------------------------------------------------
 
 def _telescope_core(arrivals: jnp.ndarray, table: LevelTable,
-                    cfg: TeraPoolConfig) -> BarrierResult:
+                    cfg: TeraPoolConfig, widths: tuple | None = None
+                    ) -> BarrierResult:
     """One barrier episode as a telescoping pyramid of unrolled steps.
 
-    Step ``i`` operates on only the first ``N / 2**i`` lanes.  The
-    bound is exact under the canonical-table invariant (identity
-    padding is tail-only, :func:`repro.core.barrier.
-    validate_tail_padding`): every real level divides the live count by
-    its group size ``g >= 2``, and once padding starts the single final
-    survivor trivially fits any later width.  Masked tail lanes inside
-    a step's window carry ``+inf`` exactly as in :func:`_scan_core`;
-    lanes beyond the window hold only ``+inf`` phantoms, which sort to
-    the back of their bank queues and never feed a live counter — so
-    dropping them changes no live lane's float trajectory and the two
-    cores agree bit for bit (tests/test_telescope.py).
+    Step ``i`` operates on only the first ``widths[i]`` lanes — the
+    *cumulative-quotient* survivor bound of the stacked schedules
+    (:func:`repro.core.barrier.telescope_widths`), or the conservative
+    ``max(1, N >> i)`` of :func:`repro.core.barrier.default_widths`
+    when ``widths`` is ``None`` (e.g. called with traced tables).  Any
+    upper bound on the live count is sound under the canonical-table
+    invariant (identity padding is tail-only, :func:`repro.core.
+    barrier.validate_tail_padding`): every real level divides the live
+    count by its group size ``g >= 2`` — floored division composes, so
+    non-power-of-two level sizes keep the bound exact — and once
+    padding starts the single final survivor trivially fits any later
+    width.  Masked tail lanes inside a step's window carry ``+inf``
+    exactly as in :func:`_scan_core`; lanes beyond the window hold
+    only ``+inf`` phantoms, which sort to the back of their bank
+    queues and never feed a live counter — so shrinking the window
+    changes no live lane's float trajectory and the two cores agree
+    bit for bit at every width table (tests/test_telescope.py,
+    tests/test_multicluster.py).
 
     Inside each step the two-pass ``jnp.lexsort((ready, bank))`` of the
     scanned core becomes a single stable multi-key ``lax.sort`` over
@@ -246,10 +265,11 @@ def _telescope_core(arrivals: jnp.ndarray, table: LevelTable,
     ``cummax`` pass.  Only the max-plus service-start scan remains a
     scan.
 
-    Step widths depend on ``N`` alone; group sizes, banks and latencies
-    are traced data — any schedule x placement combination over one
-    cluster shares this single compiled program, exactly like the
-    scanned core.
+    Step widths are a STATIC tuple shared by the whole stacked sweep
+    (one widths table per grid, computed host-side from the concrete
+    stack); group sizes, banks and latencies stay traced data — so any
+    schedule x placement combination over one stacked grid shares this
+    single compiled program, exactly like the scanned core.
     """
     n = arrivals.shape[-1]
     arrivals = jnp.asarray(arrivals, jnp.float32)
@@ -257,13 +277,20 @@ def _telescope_core(arrivals: jnp.ndarray, table: LevelTable,
     depth = table.group_sizes.shape[-1]
     svc = jnp.float32(cfg.bank_service_cycles)
 
+    if widths is None:
+        widths = default_widths(n, depth)
+    if len(widths) != depth + 1:
+        raise ValueError(
+            f"widths table has {len(widths)} entries for a depth-"
+            f"{depth} table; need depth + 1")
+
     TRACE_COUNTS["telescope_core"] += 1
 
     # Level 0 entry: call, address computation, atomic issue.
     ready = arrivals + cfg.instr_per_level
     m = jnp.int32(n)
     for i in range(depth):
-        w = max(1, n >> i)
+        w = min(int(widths[i]), n)
         ready = ready[:w]
         idx = jnp.arange(w)
         g = table.group_sizes[i]
@@ -285,9 +312,9 @@ def _telescope_core(arrivals: jnp.ndarray, table: LevelTable,
         last = jax.ops.segment_max(start, gs, num_segments=w)
         done = last + table.latencies[i][jnp.minimum(idx, width - 1)]
         # Survivors run the compare/branch + counter-reset + next-level
-        # setup, then compact into the next (halved) window.
+        # setup, then compact into the next (shrunken) window.
         m = m // g
-        w_next = max(1, n >> (i + 1))
+        w_next = min(int(widths[i + 1]), w)
         ready = jnp.where(jnp.arange(w_next) < m,
                           done[:w_next] + table.instr_cycles[i], jnp.inf)
 
@@ -320,15 +347,17 @@ def core_fn(core: str | None = None):
     return _CORE_FNS[resolve_core(core)]
 
 
-@partial(jax.jit, static_argnums=(2, 3), donate_argnums=(0,))
+@partial(jax.jit, static_argnums=(2, 3, 4), donate_argnums=(0,))
 def _simulate_flat(arrivals: jnp.ndarray, table: LevelTable,
-                   cfg: TeraPoolConfig, core: str) -> BarrierResult:
+                   cfg: TeraPoolConfig, core: str,
+                   widths: tuple | None) -> BarrierResult:
     """Jitted (trials, n_pes) batch of the selected core.  The arrival
     block is donated: it is a flattened copy owned by
     :func:`simulate_table`, so its buffer can be reused in place on
-    backends that support donation."""
+    backends that support donation.  ``widths`` is the static
+    telescope width table (``None`` = the conservative default)."""
     fn = core_fn(core)
-    return jax.vmap(lambda a: fn(a, table, cfg))(arrivals)
+    return jax.vmap(lambda a: fn(a, table, cfg, widths))(arrivals)
 
 
 def simulate_table(arrivals: jnp.ndarray, table: LevelTable,
@@ -347,11 +376,12 @@ def simulate_table(arrivals: jnp.ndarray, table: LevelTable,
     table = validate_tail_padding(table, full=False)
     arrivals = jnp.asarray(arrivals, jnp.float32)
     batch = arrivals.shape[:-1]
+    widths = telescope_widths(table, arrivals.shape[-1])
     # jnp.copy guarantees _simulate_flat donates a private buffer, never
     # the caller's array (asarray/reshape can alias their input).
     flat = jnp.copy(arrivals.reshape((-1, arrivals.shape[-1])))
     with quiet_donation():
-        res = _simulate_flat(flat, table, cfg, resolve_core(core))
+        res = _simulate_flat(flat, table, cfg, resolve_core(core), widths)
     return BarrierResult(*(x.reshape(batch) for x in res))
 
 

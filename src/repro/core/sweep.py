@@ -35,10 +35,13 @@ splits the Monte-Carlo trial axis into bounded-memory chunks
 (bit-for-bit identical to the unchunked grid — trials are
 independent), and donates its internally built arrival blocks to the
 jitted grids so big sweeps stop being memory-bound on backends with
-buffer donation.  When more than one JAX device is visible and the
-schedule axis divides evenly, the grids are sharded across devices
-over the schedule axis with ``shard_map`` (transparent single-device
-fallback — same compiled math, same results).
+buffer donation.  When more than one JAX device is visible the grids
+are sharded with ``shard_map``: delay grids over the schedule axis
+(when it divides evenly), arrival grids over a 2-D schedule x kernel
+device mesh whenever that uses more devices than the schedule axis
+alone — short hierarchical multi-cluster stacks with many workload
+kernels still saturate every device (transparent 2-D -> 1-D ->
+single-device fallback: same compiled math, same results).
 """
 from __future__ import annotations
 
@@ -157,16 +160,19 @@ def radix_tables(radices: Sequence[int], n_pes: int | None = None,
 
 
 def _sweep_body(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
-                cfg: TeraPoolConfig, core: str) -> BarrierResult:
+                cfg: TeraPoolConfig, core: str,
+                widths: tuple | None = None) -> BarrierResult:
     """(R, D, T) grid body (unjitted — shared by the plain jit and the
     sharded path).
 
     ``unit`` is a (T, n_pes) block of standard uniforms; scaling by each
     delay reproduces ``uniform_arrivals`` for that delay exactly.
+    ``widths`` is the static telescope width table of the stack
+    (``None`` = the conservative in-core default).
     """
     fn = core_fn(core)
     arrivals = delays[:, None, None] * unit[None, :, :]      # (D, T, N)
-    per_trial = jax.vmap(lambda tab, a: fn(a, tab, cfg),
+    per_trial = jax.vmap(lambda tab, a: fn(a, tab, cfg, widths),
                          in_axes=(None, 0))                  # over T
     per_delay = jax.vmap(per_trial, in_axes=(None, 0))       # over D
     per_radix = jax.vmap(per_delay, in_axes=(0, None))       # over R
@@ -178,15 +184,17 @@ def _sweep_body(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
 # buffer donation the N=1024 512-composition grids reuse the arrival
 # block in place instead of holding input + output live (CPU ignores
 # donation; results are identical either way).
-@partial(jax.jit, static_argnums=(3, 4), donate_argnums=(2,))
+@partial(jax.jit, static_argnums=(3, 4, 5), donate_argnums=(2,))
 def _sweep_grid(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
-                cfg: TeraPoolConfig, core: str) -> BarrierResult:
+                cfg: TeraPoolConfig, core: str,
+                widths: tuple | None) -> BarrierResult:
     """(R, D, T) grid through one compiled program."""
-    return _sweep_body(tables, delays, unit, cfg, core)
+    return _sweep_body(tables, delays, unit, cfg, core, widths)
 
 
 # ---------------------------------------------------------------------------
-# Device sharding over the schedule axis.
+# Device sharding: 1-D over the schedule axis, 2-D (schedule x kernel)
+# for arrival grids.
 # ---------------------------------------------------------------------------
 
 def _grid_devices(n_sched: int, shard: bool, devices=None):
@@ -206,36 +214,99 @@ def _grid_devices(n_sched: int, shard: bool, devices=None):
     return tuple(devs)
 
 
+def _mesh_shape(n_devices: int, n_sched: int, n_kern: int) -> tuple:
+    """The (sched, kern) mesh shape for a 2-D arrival-grid sharding:
+    ``ds`` divides the schedule axis, ``dk`` divides the kernel axis,
+    ``ds * dk <= n_devices``, maximizing device usage and preferring
+    the schedule axis on ties (its shards carry the level tables, the
+    bigger per-point state).  ``(1, 1)`` means no useful sharding —
+    the transparent single-device fallback.
+
+    This is what lets a 4096-16384-PE multi-cluster grid with a SHORT
+    schedule stack (a handful of hierarchical candidates) but many
+    workload kernels still saturate all devices: the kernel axis picks
+    up the slack the schedule axis leaves."""
+    best = (1, 1, 1)                       # (used, ds, dk)
+    for ds in range(1, min(n_devices, n_sched) + 1):
+        if n_sched % ds:
+            continue
+        for dk in range(1, n_devices // ds + 1):
+            if n_kern % dk:
+                continue
+            cand = (ds * dk, ds, dk)
+            if cand > best:
+                best = cand
+    return best[1], best[2]
+
+
 @functools.lru_cache(maxsize=None)
 def _sharded_grid(devices: tuple, body: str, cfg: TeraPoolConfig,
-                  core: str):
+                  core: str, widths: tuple | None):
     """Jitted ``shard_map`` of a grid body over a 1-D schedule-axis
-    mesh, cached per (devices, body, cfg, core) so repeated sweeps
-    reuse one compiled program per shape (the one-compile property now
-    holds per device topology)."""
+    mesh, cached per (devices, body, cfg, core, widths) so repeated
+    sweeps reuse one compiled program per shape (the one-compile
+    property now holds per device topology x width table)."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
     mesh = Mesh(np.asarray(devices), ("sched",))
     fn = {"sweep": _sweep_body, "arrival": _arrival_body}[body]
-    mapped = shard_map(partial(fn, cfg=cfg, core=core), mesh=mesh,
+    mapped = shard_map(partial(fn, cfg=cfg, core=core, widths=widths),
+                       mesh=mesh,
                        in_specs=(P("sched"), P(), P()),
                        out_specs=P("sched"))
+    return jax.jit(mapped, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_grid_2d(devices: tuple, shape: tuple, cfg: TeraPoolConfig,
+                     core: str, widths: tuple | None):
+    """Jitted ``shard_map`` of the ARRIVAL grid body over a 2-D
+    (schedule x kernel) device mesh: the schedule axis shards the level
+    tables, the kernel axis shards the arrival stacks, and each of the
+    ``ds * dk`` devices simulates its (S/ds, K/dk) block of the grid.
+    Outputs are (S, K, T) arrays sharded over both leading axes."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    ds, dk = shape
+    mesh = Mesh(np.asarray(devices).reshape(ds, dk), ("sched", "kern"))
+    mapped = shard_map(
+        partial(_arrival_body, cfg=cfg, core=core, widths=widths),
+        mesh=mesh,
+        in_specs=(P("sched"), P(), P("kern")),
+        out_specs=P("sched", "kern"))
     return jax.jit(mapped, donate_argnums=(2,))
 
 
 def _dispatch_grid(body: str, tables: LevelTable, fixed: jnp.ndarray,
                    block: jnp.ndarray, cfg: TeraPoolConfig, core: str,
                    shard: bool, devices=None) -> BarrierResult:
-    """Run one grid chunk: sharded over the schedule axis when several
-    devices divide it, plain jit otherwise.  ``devices`` restricts the
-    shardable device pool (see :func:`_grid_devices`)."""
-    devices = _grid_devices(tables.group_sizes.shape[0], shard, devices)
+    """Run one grid chunk: 2-D (schedule x kernel) sharded for arrival
+    grids when that uses more devices than the schedule axis alone,
+    1-D schedule-sharded when several devices divide the stack, plain
+    jit otherwise.  ``devices`` restricts the shardable device pool
+    (see :func:`_grid_devices`).
+
+    This is the single chokepoint every sweep path (plain AND
+    resilient) funnels through, so the stack's telescope width table
+    is computed exactly once per chunk here and shared by all of them.
+    """
+    n_sched = tables.group_sizes.shape[0]
+    widths = barrier.telescope_widths(tables, block.shape[-1])
     with barrier_sim.quiet_donation():
+        if body == "arrival" and shard:
+            devs = (tuple(devices) if devices is not None
+                    else tuple(jax.devices()))
+            ds, dk = _mesh_shape(len(devs), n_sched, block.shape[0])
+            if dk > 1:
+                grid = _sharded_grid_2d(devs[:ds * dk], (ds, dk), cfg,
+                                        core, widths)
+                return grid(tables, fixed, block)
+        devices = _grid_devices(n_sched, shard, devices)
         if devices is None:
             grid = {"sweep": _sweep_grid, "arrival": _arrival_grid}[body]
-            return grid(tables, fixed, block, cfg, core)
-        return _sharded_grid(devices, body, cfg, core)(tables, fixed,
-                                                       block)
+            return grid(tables, fixed, block, cfg, core, widths)
+        return _sharded_grid(devices, body, cfg, core, widths)(
+            tables, fixed, block)
 
 
 def _trial_chunks(n_trials: int, trial_chunk: int | None):
@@ -315,26 +386,28 @@ def sweep_barrier(key: jax.Array, radices: Sequence[int] | None = None,
 
 def _arrival_body(tables: LevelTable, _unused: jnp.ndarray,
                   arrivals: jnp.ndarray, cfg: TeraPoolConfig,
-                  core: str) -> BarrierResult:
+                  core: str,
+                  widths: tuple | None = None) -> BarrierResult:
     """(S, K, T) grid body of data-dependent arrivals (unjitted —
-    shared by the plain jit and the sharded path; ``_unused`` keeps the
-    (tables, fixed, block) grid calling convention so both bodies share
-    one dispatcher)."""
+    shared by the plain jit and the sharded paths; ``_unused`` keeps
+    the (tables, fixed, block) grid calling convention so both bodies
+    share one dispatcher).  ``widths`` is the static telescope width
+    table of the stack (``None`` = the conservative in-core default)."""
     fn = core_fn(core)
-    per_trial = jax.vmap(lambda tab, a: fn(a, tab, cfg),
+    per_trial = jax.vmap(lambda tab, a: fn(a, tab, cfg, widths),
                          in_axes=(None, 0))                  # over T
     per_kernel = jax.vmap(per_trial, in_axes=(None, 0))      # over K
     per_sched = jax.vmap(per_kernel, in_axes=(0, None))      # over S
     return per_sched(tables, arrivals)
 
 
-@partial(jax.jit, static_argnums=(3, 4), donate_argnums=(2,))
+@partial(jax.jit, static_argnums=(3, 4, 5), donate_argnums=(2,))
 def _arrival_grid(tables: LevelTable, _unused: jnp.ndarray,
                   arrivals: jnp.ndarray, cfg: TeraPoolConfig,
-                  core: str) -> BarrierResult:
+                  core: str, widths: tuple | None) -> BarrierResult:
     """(S, K, T) grid of data-dependent arrivals through one compile,
     donating the arrival block (built fresh by :func:`sweep_arrivals`)."""
-    return _arrival_body(tables, _unused, arrivals, cfg, core)
+    return _arrival_body(tables, _unused, arrivals, cfg, core, widths)
 
 
 def sweep_arrivals(arrivals: jnp.ndarray,
@@ -392,11 +465,12 @@ def sweep_arrivals(arrivals: jnp.ndarray,
                               placements=placements, **res._asdict())
 
 
-@partial(jax.jit, static_argnums=(2, 3))
+@partial(jax.jit, static_argnums=(2, 3, 4))
 def _schedule_stack(tables: LevelTable, arrivals: jnp.ndarray,
-                    cfg: TeraPoolConfig, core: str) -> BarrierResult:
+                    cfg: TeraPoolConfig, core: str,
+                    widths: tuple | None) -> BarrierResult:
     fn = core_fn(core)
-    return jax.vmap(lambda tab: fn(arrivals, tab, cfg))(tables)
+    return jax.vmap(lambda tab: fn(arrivals, tab, cfg, widths))(tables)
 
 
 def simulate_schedules(arrivals: jnp.ndarray,
@@ -413,8 +487,9 @@ def simulate_schedules(arrivals: jnp.ndarray,
             f"arrivals has {arrivals.shape[-1]} PEs, schedules expect "
             f"{schedules[0].n_pes}")
     tables = barrier.stack_tables(schedules, cfg, placements)
+    widths = barrier.telescope_widths(tables, arrivals.shape[-1])
     return _schedule_stack(tables, arrivals, cfg,
-                           barrier_sim.resolve_core(core))
+                           barrier_sim.resolve_core(core), widths)
 
 
 def simulate_radices(arrivals: jnp.ndarray, radices: Sequence[int],

@@ -113,4 +113,73 @@ class TeraPoolConfig:
         return self.span_bank_latency(pe, 1, bank)
 
 
+@dataclasses.dataclass(frozen=True)
+class MultiClusterConfig(TeraPoolConfig):
+    """TeraPool-of-TeraPools: ``n_clusters`` TeraPool clusters behind an
+    inter-cluster interconnect (the scale-out direction of Riedel et
+    al., arXiv 2507.05012, and the MemPool line).
+
+    ``n_pes`` is the TOTAL PE count across all clusters; PEs and banks
+    keep global contiguous indices, so cluster ``c`` owns PEs
+    ``[c * pes_per_cluster, (c+1) * pes_per_cluster)`` and the matching
+    bank block.  Inside one cluster the Tile/Group locality classes of
+    :class:`TeraPoolConfig` apply unchanged (the per-cluster structure
+    may be asymmetric or non-power-of-two, e.g. a 768-PE cluster with
+    12 Tiles per Group); any access that crosses a cluster boundary —
+    the farthest accessor of a counter, or the counter's bank, living
+    in a different cluster — pays the flat remote tier ``lat_remote``
+    (AXI hop + remote L1 arbitration, ~5x the intra-cluster worst
+    case)."""
+
+    n_clusters: int = 4
+    lat_remote: int = 25  # PE -> bank in another cluster
+
+    def __post_init__(self):
+        if self.n_clusters < 1:
+            raise ValueError(f"need >= 1 cluster, got {self.n_clusters}")
+        if self.n_pes % self.n_clusters != 0:
+            raise ValueError(
+                f"{self.n_pes} PEs do not split into {self.n_clusters} "
+                f"equal clusters")
+
+    @property
+    def pes_per_cluster(self) -> int:
+        return self.n_pes // self.n_clusters
+
+    @property
+    def banks_per_cluster(self) -> int:
+        return self.pes_per_cluster * self.banking_factor
+
+    def access_latency(self, span: int) -> int:
+        """Span heuristic with the remote tier on top: a counter whose
+        contiguous span crosses a cluster boundary is remote-class."""
+        if span > self.pes_per_cluster:
+            return self.lat_remote
+        return super().access_latency(span)
+
+    def span_bank_latency(self, pe_lo: int, span: int, bank: int) -> int:
+        """Worst-accessor latency with inter-cluster placement classes:
+        remote whenever the accessor block spans two clusters or the
+        bank lives in a different cluster than the accessors."""
+        pe_hi = pe_lo + span - 1
+        if not (pe_lo // self.pes_per_cluster
+                == pe_hi // self.pes_per_cluster
+                == bank // self.banks_per_cluster):
+            return self.lat_remote
+        return super().span_bank_latency(pe_lo, span, bank)
+
+
+def multi_cluster(cluster: TeraPoolConfig = None, n_clusters: int = 4,
+                  lat_remote: int = 25) -> MultiClusterConfig:
+    """``n_clusters`` copies of ``cluster`` (default: the paper's
+    1024-PE TeraPool) as one :class:`MultiClusterConfig`: per-cluster
+    timing/structure fields carry over, ``n_pes`` becomes the total."""
+    cluster = cluster if cluster is not None else DEFAULT
+    fields = {f.name: getattr(cluster, f.name)
+              for f in dataclasses.fields(TeraPoolConfig)}
+    fields["n_pes"] = cluster.n_pes * n_clusters
+    return MultiClusterConfig(**fields, n_clusters=n_clusters,
+                              lat_remote=lat_remote)
+
+
 DEFAULT = TeraPoolConfig()

@@ -13,6 +13,10 @@ space:
   only compositions whose level spans land on Tile/Group/cluster
   boundaries, where counters never straddle a locality class
   (128 schedules at N=1024).
+* :func:`multicluster_schedules` — the scale-out space for
+  :class:`~repro.core.topology.MultiClusterConfig` machines: every
+  intra-cluster composition jointly crossed with every inter-cluster
+  tree (4096-16384 PEs through the same one-compile sweep).
 * :func:`tune_barrier` — the exhaustive tuner: every composition x
   placement x delay x trial through the single compiled scanned core
   of :mod:`repro.core.sweep` — one compile for the whole design space.
@@ -61,44 +65,62 @@ from .topology import DEFAULT, TeraPoolConfig
 def enumerate_compositions(n_pes: int | None = None,
                            cfg: TeraPoolConfig = DEFAULT
                            ) -> List[Tuple[int, ...]]:
-    """All compositions of ``log2(N)`` into power-of-two level sizes,
-    leaf level first, in lexicographic order of the exponent parts.
-
-    ``2**(log2(N) - 1)`` compositions; every :func:`~repro.core.barrier.
-    kary_tree` shape (first level adapted, uniform tail) appears among
-    them, as does the central counter ``(N,)``.
+    """All ordered factorizations of ``N`` into level sizes >= 2, leaf
+    level first — for power-of-two ``N`` this is exactly the classic
+    composition-of-``log2(N)`` space in the same lexicographic order
+    (``2**(log2(N) - 1)`` entries), and for non-power-of-two ``N``
+    (768-PE clusters, 12-way groups, cluster counts) it is its natural
+    generalization.  Every :func:`~repro.core.barrier.kary_tree` shape
+    (first level adapted, uniform tail) appears among them, as does the
+    central counter ``(N,)``.
     """
     n = int(n_pes if n_pes is not None else cfg.n_pes)
-    barrier._check_pow2(n, "n_pes")
-    m = int(math.log2(n))
+    if n < 2:
+        raise ValueError(f"n_pes must be >= 2, got {n}")
 
-    def parts(remaining: int):
-        if remaining == 0:
+    def facts(remaining: int):
+        if remaining == 1:
             yield ()
             return
-        for p in range(1, remaining + 1):
-            for rest in parts(remaining - p):
-                yield (1 << p,) + rest
+        for f in range(2, remaining + 1):
+            if remaining % f:
+                continue
+            for rest in facts(remaining // f):
+                yield (f,) + rest
 
-    return list(parts(m))
+    return list(facts(n))
+
+
+def _hier_segments(n: int, cfg: TeraPoolConfig) -> List[int]:
+    """Locality-class segment sizes of ``n`` PEs under ``cfg``, leaf
+    first: Tile share, Group share, cluster share — topped by the
+    cluster count when ``cfg`` is a :class:`~repro.core.topology.
+    MultiClusterConfig` and ``n`` spans several clusters.  ``gcd``
+    (not ``min``) aligns each segment for non-power-of-two shapes;
+    both agree on power-of-two machines."""
+    top: List[int] = []
+    ppc = getattr(cfg, "pes_per_cluster", n)
+    if getattr(cfg, "n_clusters", 1) > 1 and n > ppc and n % ppc == 0:
+        top = [n // ppc]
+        n = ppc
+    t = math.gcd(n, cfg.pes_per_tile)
+    g = math.gcd(n // t, cfg.tiles_per_group)
+    c = n // (t * g)
+    return [s for s in (t, g, c) if s > 1] + top
 
 
 def hierarchy_compositions(n_pes: int | None = None,
                            cfg: TeraPoolConfig = DEFAULT
                            ) -> List[Tuple[int, ...]]:
     """The hierarchy-aware pruned search space: compositions whose
-    cumulative spans include every Tile/Group boundary inside ``N``, so
-    no level's counters straddle a locality class.  The product of the
+    cumulative spans include every Tile/Group — and, on a
+    multi-cluster machine, cluster — boundary inside ``N``, so no
+    level's counters straddle a locality class.  The product of the
     per-segment compositions — 4 x 8 x 4 = 128 schedules for the full
     8/16/8 cluster versus 512 exhaustive."""
     n = int(n_pes if n_pes is not None else cfg.n_pes)
-    barrier._check_pow2(n, "n_pes")
-    # Segment factors up the hierarchy, clipped to n.
-    t = min(n, cfg.pes_per_tile)
-    g = min(n // t, cfg.tiles_per_group)
-    c = n // (t * g)
     out: List[Tuple[int, ...]] = []
-    segs = [s for s in (t, g, c) if s > 1]
+    segs = _hier_segments(n, cfg)
     if not segs:
         return [(n,)] if n > 1 else []
 
@@ -116,6 +138,41 @@ def hierarchy_compositions(n_pes: int | None = None,
     for comp in product(0):
         out.append(comp)
     return out
+
+
+def multicluster_compositions(cfg, *,
+                              intra: Sequence[Tuple[int, ...]] | None = None,
+                              inter: Sequence[Tuple[int, ...]] | None = None
+                              ) -> List[Tuple[int, ...]]:
+    """The hierarchical multi-cluster search space: every intra-cluster
+    composition extended by every inter-cluster tree, leaf first.
+
+    ``intra`` defaults to the hierarchy-pruned per-cluster space
+    (:func:`hierarchy_compositions` over ``cfg.pes_per_cluster``) and
+    ``inter`` to the full factorization space of ``cfg.n_clusters``
+    (:func:`enumerate_compositions`), so the joint sweep tunes the
+    inside-the-cluster tree and the cross-cluster reduction together —
+    the scale-out analogue of the paper's Sec. 5 fine-tuning.
+    """
+    if intra is None:
+        intra = hierarchy_compositions(cfg.pes_per_cluster, cfg)
+    if inter is None:
+        inter = (enumerate_compositions(cfg.n_clusters, cfg)
+                 if cfg.n_clusters > 1 else [()])
+    return [tuple(ic) + tuple(xc) for ic in intra for xc in inter]
+
+
+def multicluster_schedules(cfg, *,
+                           intra: Sequence[Tuple[int, ...]] | None = None,
+                           inter: Sequence[Tuple[int, ...]] | None = None,
+                           partial: bool = False) -> List[BarrierSchedule]:
+    """Materialize :func:`multicluster_compositions` as schedules over
+    the full ``cfg.n_pes`` machine (one stacked
+    :class:`~repro.core.barrier.LevelTable` shape — the whole space is
+    one compile through the sweep entry points)."""
+    return [barrier.mixed_radix_tree(c, cfg=cfg, partial=partial)
+            for c in multicluster_compositions(cfg, intra=intra,
+                                               inter=inter)]
 
 
 def all_schedules(n_pes: int | None = None,

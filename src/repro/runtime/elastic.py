@@ -66,6 +66,31 @@ def viable_schedule_devices(devices: Sequence, n_schedules: int, *,
     return None
 
 
+def viable_grid_devices(devices: Sequence, n_schedules: int,
+                        n_kernels: int, *,
+                        min_devices: int = 1) -> Optional[tuple]:
+    """Largest usable prefix of ``devices`` for a 2-D
+    (schedule x kernel) arrival grid — the 2-D sibling of
+    :func:`viable_schedule_devices`.
+
+    Delegates the shape choice to the sweep dispatcher's own
+    :func:`repro.core.sweep._mesh_shape` so the survivors re-shard
+    exactly the way a fresh launch would (schedule axis preferred,
+    kernel axis picking up the slack).  Returns the ``ds * dk``-device
+    prefix, or ``None`` when fewer than ``min_devices`` remain viable.
+    """
+    from ..core.sweep import _mesh_shape
+    if n_schedules < 1:
+        raise ValueError(f"need a non-empty schedule axis, got "
+                         f"{n_schedules}")
+    if n_kernels < 1:
+        raise ValueError(f"need a non-empty kernel axis, got {n_kernels}")
+    ds, dk = _mesh_shape(len(devices), n_schedules, n_kernels)
+    if ds * dk < max(1, min_devices):
+        return None
+    return tuple(devices[:ds * dk])
+
+
 def rescale_batch(global_batch: int, old_data: int, new_data: int) -> int:
     """Keep per-device batch constant across a re-mesh (synchronous DP
     semantics: the optimizer sees a smaller global batch until capacity

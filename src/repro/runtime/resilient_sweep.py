@@ -27,12 +27,19 @@ for training:
   watchdog (median-relative, like the runner's per-step watchdog)
   raises :class:`~repro.runtime.fault.StragglerAbort` so a sweep stuck
   on one slow chunk gets rescheduled instead of stalling the grid.
-* **Elastic re-sharding** — on device loss the schedule-axis mesh is
-  rebuilt from the survivors
-  (:func:`repro.runtime.elastic.viable_schedule_devices`) and the
-  sweep continues on the smaller mesh.  ``shard_map`` results are
-  device-count-invariant (tests/test_telescope.py), so shrinking the
-  mesh preserves bit-for-bit equality too.
+* **Elastic re-sharding** — on device loss the mesh is rebuilt from
+  the survivors (:func:`repro.runtime.elastic.viable_schedule_devices`
+  for delay grids, :func:`~repro.runtime.elastic.viable_grid_devices`
+  for 2-D schedule x kernel arrival grids) and the sweep continues on
+  the smaller mesh.  ``shard_map`` results are device-count-invariant
+  (tests/test_telescope.py), so shrinking the mesh preserves
+  bit-for-bit equality too.
+* **Multi-host chunk stores** — ``host_id``/``host_count`` in
+  :class:`ResilienceConfig` interleave chunk ownership across hosts
+  sharing one checkpoint directory: each host computes chunks
+  ``idx % host_count == host_id``, restores the rest from the store,
+  and reports (by raising) exactly which foreign chunks are still
+  missing so an orchestrator can re-poll until the grid assembles.
 
 Entry points mirror the plain engines one-for-one —
 :func:`resilient_sweep_schedules` / :func:`resilient_sweep_arrivals`
@@ -93,6 +100,23 @@ class ResilienceConfig:
     straggler_floor: float = 30.0
     min_devices: int = 1
     cleanup: bool = False     # drop the chunk store once the result is out
+    # Multi-host chunk ownership: host ``host_id`` of ``host_count``
+    # computes the chunks with ``idx % host_count == host_id`` and
+    # restores every other chunk from the shared store (all hosts point
+    # ``ckpt_dir`` at the same filesystem).  A host whose unowned
+    # chunks are not on disk yet raises listing the missing indices —
+    # rerun it after the owners have published (the store digest is
+    # host-independent, so any host's chunks interchange bit-for-bit).
+    host_id: int = 0
+    host_count: int = 1
+
+    def __post_init__(self):
+        if self.host_count < 1:
+            raise ValueError(f"host_count must be >= 1, got "
+                             f"{self.host_count}")
+        if not 0 <= self.host_id < self.host_count:
+            raise ValueError(
+                f"host_id {self.host_id} outside [0, {self.host_count})")
 
 
 @dataclasses.dataclass
@@ -135,8 +159,10 @@ class _ChunkedGrid:
                  rcfg: ResilienceConfig, plan: Optional[FaultPlan],
                  devices: Optional[Sequence], digest: str,
                  sleep: Callable[[float], None],
-                 clock: Callable[[], float]):
+                 clock: Callable[[], float],
+                 n_kernels: Optional[int] = None):
         self.kind = kind
+        self.n_kernels = n_kernels
         self.tables = tables
         self.fixed = fixed
         self.chunk_fn = chunk_fn
@@ -219,8 +245,13 @@ class _ChunkedGrid:
                     f"({self.rcfg.straggler_factor}x median {med:.3f}s)")
         self._durations.append(seconds)
 
+    def _owns(self, idx: int) -> bool:
+        """Chunk ownership under the interleaved multi-host split."""
+        return idx % self.rcfg.host_count == self.rcfg.host_id
+
     # -- chunk loop -------------------------------------------------------
     def _attempt(self) -> None:
+        missing: List[int] = []
         for idx, (lo, hi) in enumerate(self.chunks):
             if self.plan is not None:
                 self.plan.at_chunk(idx)
@@ -230,6 +261,12 @@ class _ChunkedGrid:
             if restored is not None:
                 self._parts[idx] = restored
                 self.report.chunks_resumed += 1
+                continue
+            if not self._owns(idx):
+                # Another host's chunk, not published yet: keep
+                # computing our own share and report the gap at the
+                # end so a rerun can fill it from the store.
+                missing.append(idx)
                 continue
             t0 = self.clock()
             res = sweep_mod._dispatch_grid(
@@ -248,6 +285,24 @@ class _ChunkedGrid:
             self._save_chunk(idx, res)
             self._parts[idx] = res
             self.report.chunks_computed += 1
+        if missing:
+            raise RuntimeError(
+                f"host {self.rcfg.host_id}/{self.rcfg.host_count} "
+                f"computed its own chunks but chunk(s) {missing} owned "
+                f"by other host(s) are not in the store yet; rerun "
+                f"after the owners publish")
+
+    def _remesh(self, survivors: Sequence) -> Optional[tuple]:
+        """The survivors' mesh, shaped the way a fresh dispatch would
+        shard this grid: 2-D (schedule x kernel) capable for arrival
+        grids, schedule-axis-only for delay grids."""
+        n_sched = self.tables.group_sizes.shape[0]
+        if self.kind == "arrival" and self.n_kernels is not None:
+            return elastic.viable_grid_devices(
+                survivors, n_sched, self.n_kernels,
+                min_devices=self.rcfg.min_devices)
+        return elastic.viable_schedule_devices(
+            survivors, n_sched, min_devices=self.rcfg.min_devices)
 
     def _on_fault(self, exc: Exception) -> None:
         self.report.faults.append(str(exc))
@@ -258,9 +313,7 @@ class _ChunkedGrid:
         if isinstance(exc, DeviceLoss):
             survivors = self.devices[:max(0, len(self.devices)
                                           - exc.n_lost)]
-            mesh = elastic.viable_schedule_devices(
-                survivors, self.tables.group_sizes.shape[0],
-                min_devices=self.rcfg.min_devices)
+            mesh = self._remesh(survivors)
             if mesh is None:
                 raise RuntimeError(
                     f"only {len(survivors)} device(s) survive; need "
@@ -381,7 +434,7 @@ def resilient_sweep_arrivals(
         chunk_shape=lambda lo, hi: (s_count, k_count, hi - lo),
         n_trials=n_trials, cfg=cfg, core=core, rcfg=resilience,
         plan=fault_plan, devices=devices, digest=digest, sleep=sleep,
-        clock=clock)
+        clock=clock, n_kernels=k_count)
     res = driver.run()
     kernels = (tuple(kernels) if kernels is not None
                else tuple(f"workload{i}" for i in range(k_count)))

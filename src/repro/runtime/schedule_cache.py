@@ -25,6 +25,12 @@ stay hermetic).  Payloads hold *encoded* schedules/placements —
 :class:`~repro.core.barrier.BarrierSchedule` through its level sizes
 (the schedule algebra re-derives spans and latencies from ``cfg``),
 and placements through their explicit bank/latency tables.
+
+The store is additionally BOUNDED: ``REPRO_SCHEDULE_CACHE_TTL``
+(seconds) expires entries by age and ``REPRO_SCHEDULE_CACHE_MAX``
+(entry count) applies LRU eviction on store — both mtime-based (a hit
+touches its entry's mtime, so recently served schedules survive the
+cap), both off when unset, both counted in ``STATS["evictions"]``.
 """
 from __future__ import annotations
 
@@ -33,14 +39,23 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from pathlib import Path
 from typing import Optional, Tuple
 
 # Environment knob naming the cache directory; unset == disabled.
 CACHE_ENV = "REPRO_SCHEDULE_CACHE"
+# Entry time-to-live in seconds (float); unset/empty == entries never
+# expire.  Age is measured from the entry file's mtime, which doubles
+# as the LRU clock (hits re-touch it).
+TTL_ENV = "REPRO_SCHEDULE_CACHE_TTL"
+# Maximum entry count (int); unset/empty == unbounded.  Enforced on
+# every ``store`` by evicting least-recently-used entries first.
+MAX_ENV = "REPRO_SCHEDULE_CACHE_MAX"
 
 # Process-level cache traffic counters (reset with ``reset_stats``).
-STATS = {"hits": 0, "misses": 0, "corrupt": 0, "stores": 0}
+STATS = {"hits": 0, "misses": 0, "corrupt": 0, "stores": 0,
+         "evictions": 0}
 
 
 def reset_stats() -> None:
@@ -53,6 +68,67 @@ def cache_dir() -> Optional[Path]:
     Read per call so tests (and operators) can flip the env var."""
     d = os.environ.get(CACHE_ENV)
     return Path(d) if d else None
+
+
+def _env_number(name: str, cast) -> Optional[float]:
+    """The env knob as a number, or ``None`` when unset/empty/invalid
+    (a malformed limit must never take the cache down)."""
+    raw = os.environ.get(name)
+    if not raw:
+        return None
+    try:
+        val = cast(raw)
+    except ValueError:
+        return None
+    return val if val > 0 else None
+
+
+def _expired(path: Path, now: float) -> bool:
+    """Entry older than the TTL (``False`` when no TTL is set)."""
+    ttl = _env_number(TTL_ENV, float)
+    if ttl is None:
+        return False
+    try:
+        return now - path.stat().st_mtime > ttl
+    except OSError:
+        return True
+
+
+def evict(now: Optional[float] = None) -> int:
+    """Apply the TTL and LRU-size policies to the store: drop expired
+    entries, then the least-recently-used entries beyond the
+    ``REPRO_SCHEDULE_CACHE_MAX`` cap (mtime is the LRU clock — hits
+    touch it).  Returns the number of entries evicted; called on every
+    :func:`store`, callable directly by operators."""
+    root = cache_dir()
+    if root is None or not root.is_dir():
+        return 0
+    now = time.time() if now is None else now
+    entries = []
+    dropped = 0
+    for path in root.glob("*.json"):
+        if _expired(path, now):
+            try:
+                path.unlink()
+                dropped += 1
+            except OSError:
+                pass
+            continue
+        try:
+            entries.append((path.stat().st_mtime, path))
+        except OSError:
+            pass
+    cap = _env_number(MAX_ENV, int)
+    if cap is not None and len(entries) > cap:
+        entries.sort()               # oldest mtime first == LRU first
+        for _, path in entries[:len(entries) - int(cap)]:
+            try:
+                path.unlink()
+                dropped += 1
+            except OSError:
+                pass
+    STATS["evictions"] += dropped
+    return dropped
 
 
 @functools.lru_cache(maxsize=1)
@@ -96,6 +172,14 @@ def load(key: tuple) -> Optional[dict]:
     if not path.exists():
         STATS["misses"] += 1
         return None
+    if _expired(path, time.time()):
+        try:
+            path.unlink()
+        except OSError:
+            pass
+        STATS["evictions"] += 1
+        STATS["misses"] += 1
+        return None
     try:
         entry = json.loads(path.read_text())
         payload = entry["payload"]
@@ -112,6 +196,10 @@ def load(key: tuple) -> Optional[dict]:
             pass
         return None
     STATS["hits"] += 1
+    try:
+        os.utime(path)               # LRU touch: a hit is recent use
+    except OSError:
+        pass
     return payload
 
 
@@ -137,6 +225,7 @@ def store(key: tuple, payload: dict) -> None:
             pass
         raise
     STATS["stores"] += 1
+    evict()
 
 
 # ---------------------------------------------------------------------------

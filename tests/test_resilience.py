@@ -10,6 +10,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 from pathlib import Path
 
 import jax
@@ -412,3 +413,160 @@ def test_fiveg_modes_read_through_cache(cache_env, monkeypatch):
 def test_code_version_is_stable():
     assert schedule_cache.code_version() == schedule_cache.code_version()
     assert len(schedule_cache.code_version()) == 16
+
+
+# ---------------------------------------------------------------------------
+# Multi-host chunk stores: interleaved ownership over one shared
+# checkpoint directory.
+# ---------------------------------------------------------------------------
+
+def test_multihost_config_validates():
+    with pytest.raises(ValueError, match="host_count"):
+        ResilienceConfig(ckpt_dir="x", host_count=0)
+    with pytest.raises(ValueError, match="host_id"):
+        ResilienceConfig(ckpt_dir="x", host_id=2, host_count=2)
+    with pytest.raises(ValueError, match="host_id"):
+        ResilienceConfig(ckpt_dir="x", host_id=-1)
+
+
+def test_multihost_interleaved_chunks_arrivals(tmp_path):
+    """Two hosts share one store: host 0 computes chunks 0 and 2 then
+    raises listing the foreign chunks 1 and 3; host 1 restores 0/2,
+    fills 1/3; a host-0 rerun then assembles the full grid purely from
+    the store — bit-for-bit equal to the plain engine."""
+    scheds = tuning.all_schedules(64)
+    arr = 300.0 * jax.random.uniform(KEY, (2, 8, 64))
+    base = sweep.sweep_arrivals(arr, scheds, kernels=("a", "b"))
+    store = tmp_path / "shared"
+    rc0 = ResilienceConfig(ckpt_dir=str(store), trial_chunk=2,
+                           host_id=0, host_count=2)
+    with pytest.raises(RuntimeError, match=r"chunk\(s\) \[1, 3\]"):
+        resilient_sweep_arrivals(arr, scheds, kernels=("a", "b"),
+                                 resilience=rc0, sleep=_nosleep)
+    # host 0 published exactly its own interleaved chunks
+    assert (store / "step_00000000").exists()
+    assert (store / "step_00000002").exists()
+    assert not (store / "step_00000001").exists()
+    rc1 = ResilienceConfig(ckpt_dir=str(store), trial_chunk=2,
+                           host_id=1, host_count=2)
+    rep1 = resilient_sweep_arrivals(arr, scheds, kernels=("a", "b"),
+                                    resilience=rc1, sleep=_nosleep)
+    _assert_same(rep1.result, base)
+    assert rep1.chunks_resumed == 2 and rep1.chunks_computed == 2
+    # rerun of host 0: everything restores, nothing recomputes
+    rep0 = resilient_sweep_arrivals(arr, scheds, kernels=("a", "b"),
+                                    resilience=rc0, sleep=_nosleep)
+    _assert_same(rep0.result, base)
+    assert rep0.chunks_resumed == 4 and rep0.chunks_computed == 0
+
+
+def test_multihost_three_way_schedules(tmp_path):
+    """Three hosts over a 4-chunk delay sweep; completion in arbitrary
+    host order still assembles the exact plain-engine result."""
+    scheds = tuning.all_schedules(64)[:8]
+    base = sweep.sweep_schedules(KEY, scheds, DELAYS, N_TRIALS)
+    store = tmp_path / "shared3"
+
+    def run_host(h):
+        rc = ResilienceConfig(ckpt_dir=str(store), trial_chunk=2,
+                              host_id=h, host_count=3)
+        return resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                         resilience=rc, sleep=_nosleep)
+
+    # hosts 1 and 2 go first: each owns only a strict subset
+    with pytest.raises(RuntimeError, match=r"host 1/3"):
+        run_host(1)                      # owns chunk 1; misses 0, 2, 3
+    with pytest.raises(RuntimeError, match=r"chunk\(s\) \[0, 3\]"):
+        run_host(2)                      # owns chunk 2; restores 1
+    rep0 = run_host(0)                   # owns 0 and 3: completes
+    _assert_same(rep0.result, base)
+    assert rep0.chunks_computed == 2 and rep0.chunks_resumed == 2
+
+
+def test_multihost_default_is_single_host(tmp_path):
+    rc = _rcfg(tmp_path)
+    assert rc.host_id == 0 and rc.host_count == 1
+    scheds = tuning.all_schedules(64)[:4]
+    rep = resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                    resilience=rc, sleep=_nosleep)
+    assert rep.chunks_computed == N_TRIALS // 2
+
+
+# ---------------------------------------------------------------------------
+# Schedule cache TTL + LRU size-capped eviction.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def bounded_cache(cache_env, monkeypatch):
+    """The cache_env store with the TTL/MAX knobs cleared for explicit
+    per-test control."""
+    monkeypatch.delenv(schedule_cache.TTL_ENV, raising=False)
+    monkeypatch.delenv(schedule_cache.MAX_ENV, raising=False)
+    return cache_env
+
+
+def _backdate(path, seconds):
+    old = time.time() - seconds
+    os.utime(path, (old, old))
+
+
+def test_schedule_cache_ttl_expires_entries(bounded_cache, monkeypatch):
+    monkeypatch.setenv(schedule_cache.TTL_ENV, "100")
+    sched, plc = tuning.tuned_for_workload("dotp_1Mi", 64)
+    tuning.tuned_for_workload.cache_clear()
+    _backdate(next(bounded_cache.glob("*.json")), 1000)
+    schedule_cache.reset_stats()
+    sched2, plc2 = tuning.tuned_for_workload("dotp_1Mi", 64)
+    # the stale entry was evicted, read as a miss, and re-tuned
+    assert schedule_cache.STATS["evictions"] >= 1
+    assert schedule_cache.STATS["misses"] == 1
+    assert schedule_cache.STATS["stores"] == 1
+    assert (sched2, plc2) == (sched, plc)
+    # the fresh rewrite serves hits again
+    tuning.tuned_for_workload.cache_clear()
+    assert tuning.tuned_for_workload("dotp_1Mi", 64) == (sched, plc)
+    assert schedule_cache.STATS["hits"] == 1
+
+
+def test_schedule_cache_lru_size_cap(bounded_cache, monkeypatch):
+    monkeypatch.setenv(schedule_cache.MAX_ENV, "2")
+    schedule_cache.store(("k1",), {"v": 1})
+    _backdate(schedule_cache._entry_path(bounded_cache, ("k1",)), 300)
+    schedule_cache.store(("k2",), {"v": 2})
+    _backdate(schedule_cache._entry_path(bounded_cache, ("k2",)), 200)
+    assert schedule_cache.STATS["evictions"] == 0
+    schedule_cache.store(("k3",), {"v": 3})   # cap hit: k1 is LRU
+    assert schedule_cache.STATS["evictions"] == 1
+    assert schedule_cache.load(("k1",)) is None
+    assert schedule_cache.load(("k2",)) == {"v": 2}
+    assert schedule_cache.load(("k3",)) == {"v": 3}
+    assert len(list(bounded_cache.glob("*.json"))) == 2
+
+
+def test_schedule_cache_hit_touches_lru_clock(bounded_cache, monkeypatch):
+    monkeypatch.setenv(schedule_cache.MAX_ENV, "2")
+    schedule_cache.store(("k1",), {"v": 1})
+    _backdate(schedule_cache._entry_path(bounded_cache, ("k1",)), 300)
+    schedule_cache.store(("k2",), {"v": 2})
+    _backdate(schedule_cache._entry_path(bounded_cache, ("k2",)), 200)
+    # a hit on k1 makes it most-recently-used: k2 gets evicted instead
+    assert schedule_cache.load(("k1",)) == {"v": 1}
+    schedule_cache.store(("k3",), {"v": 3})
+    assert schedule_cache.load(("k2",)) is None
+    assert schedule_cache.load(("k1",)) == {"v": 1}
+    assert schedule_cache.load(("k3",)) == {"v": 3}
+
+
+def test_schedule_cache_evict_direct_and_unbounded(bounded_cache):
+    schedule_cache.store(("a",), {"v": 1})
+    schedule_cache.store(("b",), {"v": 2})
+    # no TTL, no cap: evict is a no-op
+    assert schedule_cache.evict() == 0
+    assert schedule_cache.STATS["evictions"] == 0
+    # malformed knobs are ignored, never fatal
+    os.environ[schedule_cache.MAX_ENV] = "not-a-number"
+    try:
+        assert schedule_cache.evict() == 0
+    finally:
+        del os.environ[schedule_cache.MAX_ENV]
+    assert len(list(bounded_cache.glob("*.json"))) == 2

@@ -36,11 +36,15 @@ def test_mixed_radix_tree_validation():
     with pytest.raises(ValueError):
         barrier.mixed_radix_tree(())
     with pytest.raises(ValueError):
-        barrier.mixed_radix_tree((8, 3))          # not a power of two
+        barrier.mixed_radix_tree((8, 1, 16))      # identity level
     with pytest.raises(ValueError):
         barrier.mixed_radix_tree((8, 16), n_pes=1024)   # product mismatch
     with pytest.raises(ValueError):
         barrier.mixed_radix_tree((1024, 4))       # exceeds the cluster
+    # Non-power-of-two level sizes are part of the algebra now: any
+    # ordered factorization into sizes >= 2 builds a valid tree.
+    s = barrier.mixed_radix_tree((8, 3))
+    assert s.n_pes == 24 and s.sizes == (8, 3)
 
 
 def test_named_schedules_are_thin_wrappers():
