@@ -1,0 +1,159 @@
+"""Energy benchmark: hardware-vs-software barriers on the joint
+latency x energy plane (Glaser et al., arXiv 2004.06662, on TeraPool).
+
+Three measurements, written to ``BENCH_energy.json`` at the repo root:
+
+* **Energy per barrier vs N** — mean episode energy (pJ) and span
+  (cycles) of the central counter, the radix-32 tree and the hardware
+  event unit at each machine size, on the same simultaneous-arrival
+  draws.  The hardware primitive should dominate every software tree
+  on BOTH axes (the Glaser headline).
+* **Pareto front at the largest N** — the 2-D latency x energy front
+  over the EXHAUSTIVE software composition space at delay 0
+  (:func:`repro.core.tuning.pareto_front`): deep hierarchy-matched
+  trees win cycles, wide shallow trees win energy (fewer counter
+  RMWs), and the staircase between them is the tuner's offer to a
+  latency/energy budget.  The hw point is appended separately — it
+  dominates the entire software front, which is the point.
+* **5G energy overhead** — ``fiveg.compare_barriers`` with
+  ``sync="hw"``: the fraction of application energy spent inside
+  barriers per mode, plus hw-vs-central sync-energy ratio.
+
+Environment knobs (CI smoke uses all three):
+  * ``REPRO_BENCH_ENERGY_NS``  — comma-separated PE counts (default
+    ``64,256,1024``; CI runs 64).  The Pareto front runs at the
+    largest listed N.
+  * ``REPRO_BENCH_ENERGY_5G_N`` — cluster size for the 5G section
+    (default 1024).
+  * ``BENCH_ENERGY_JSON``       — output path (default
+    ``<repo>/BENCH_energy.json``).
+"""
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import barrier, fiveg, sweep, tuning
+from repro.core.topology import DEFAULT, TeraPoolConfig
+
+from . import timing
+
+KEY = jax.random.PRNGKey(0)
+N_TRIALS = 8
+DELAY = 0.0   # simultaneous arrival: the contention-dominated regime
+
+_NS = tuple(int(x) for x in os.environ.get(
+    "REPRO_BENCH_ENERGY_NS", "64,256,1024").split(","))
+_5G_N = int(os.environ.get("REPRO_BENCH_ENERGY_5G_N", "1024"))
+_OUT = Path(os.environ.get(
+    "BENCH_ENERGY_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_energy.json"))
+
+
+def _cfg(n: int) -> TeraPoolConfig:
+    return DEFAULT if n == DEFAULT.n_pes else TeraPoolConfig(n_pes=n)
+
+
+def _mode_stack(cfg):
+    return [("central", barrier.central_counter(cfg=cfg)),
+            (f"tree{min(32, cfg.n_pes)}",
+             barrier.kary_tree(min(32, cfg.n_pes), cfg=cfg)),
+            ("hw", barrier.hw_event_unit(cfg=cfg))]
+
+
+def _energy_vs_n(rows: list) -> dict:
+    out = {}
+    for n in _NS:
+        cfg = _cfg(n)
+        names, scheds = zip(*_mode_stack(cfg))
+        res, steady_us, compile_us = timing.measure(
+            lambda: sweep.sweep_schedules(
+                KEY, list(scheds), delays=(DELAY,), n_trials=N_TRIALS,
+                cfg=cfg), iters=2)
+        span = jnp.mean(res.span_cycles, axis=-1)[:, 0]
+        energy = jnp.mean(res.energy, axis=-1)[:, 0]
+        entry = {}
+        for i, name in enumerate(names):
+            entry[name] = {"span_cycles": round(float(span[i]), 1),
+                           "energy_pj": round(float(energy[i]), 1)}
+        sw = [i for i, nm in enumerate(names) if nm != "hw"]
+        hw = names.index("hw")
+        entry["hw_dominates_software"] = bool(
+            all(float(span[hw]) < float(span[i])
+                and float(energy[hw]) < float(energy[i]) for i in sw))
+        out[f"N={n}"] = entry
+        rows.append((f"energy_modes_N{n}", steady_us,
+                     f"hwE={entry['hw']['energy_pj']}pJ", compile_us))
+    return out
+
+
+def _pareto(rows: list) -> dict:
+    n = max(_NS)
+    cfg = _cfg(n)
+    scheds = tuning.all_schedules(n, cfg, prune="none")
+    res, steady_us, compile_us = timing.measure(
+        lambda: tuning.tune_barrier(KEY, n, delays=(DELAY,),
+                                    n_trials=N_TRIALS, cfg=cfg,
+                                    schedules=scheds), iters=1)
+    front = tuning.pareto_front(res)
+    hw_res = sweep.sweep_schedules(
+        KEY, [barrier.hw_event_unit(cfg=cfg)], delays=(DELAY,),
+        n_trials=N_TRIALS, cfg=cfg)
+    hw_span = float(jnp.mean(hw_res.span_cycles, axis=-1)[0, 0])
+    hw_energy = float(jnp.mean(hw_res.energy, axis=-1)[0, 0])
+    entry = {
+        "n_pes": n,
+        "delay": DELAY,
+        "n_schedules": len(scheds),
+        "n_software_points": len(front),
+        "front": [{"name": p.name,
+                   "span_cycles": round(p.mean_span, 1),
+                   "energy_pj": round(p.mean_energy, 1)} for p in front],
+        "hw_point": {"name": "hw",
+                     "span_cycles": round(hw_span, 1),
+                     "energy_pj": round(hw_energy, 1)},
+        "hw_dominates_front": bool(all(
+            hw_span < p.mean_span and hw_energy < p.mean_energy
+            for p in front)),
+    }
+    rows.append((f"energy_pareto_N{n}", steady_us,
+                 f"{len(front)}pts", compile_us))
+    return entry
+
+
+def _fiveg(rows: list) -> dict:
+    cfg = _cfg(_5G_N)
+    modes = ("central", "tree", "hw")
+    out, steady_us, compile_us = timing.measure(
+        lambda: fiveg.compare_barriers(KEY, modes=modes, cfg=cfg), iters=1)
+    entry = {"n_pes": _5G_N}
+    for mode in modes:
+        r = out[mode]
+        entry[mode] = {
+            "total_cycles": round(float(r.total_cycles), 1),
+            "sync_energy_pj": round(float(r.sync_energy), 1),
+            "energy_fraction": round(float(r.energy_fraction), 5),
+            "stage_schedule": r.stage_schedule,
+        }
+    entry["speedup_hw"] = round(float(out["speedup_hw"]), 3)
+    entry["energy_ratio_hw"] = round(float(out["energy_ratio_hw"]), 2)
+    entry["energy_ratio_tree"] = round(float(out["energy_ratio_tree"]), 2)
+    rows.append((f"energy_5g_N{_5G_N}", steady_us,
+                 f"ratio={entry['energy_ratio_hw']}", compile_us))
+    return entry
+
+
+def run():
+    rows = []
+    record = {"energy_per_barrier": _energy_vs_n(rows),
+              "pareto": _pareto(rows),
+              "fiveg": _fiveg(rows)}
+    _OUT.write_text(json.dumps(record, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -4,21 +4,25 @@ Two coupled layers (DESIGN.md §2):
 
 * **Faithful reproduction** — a cycle-level simulator of TeraPool barrier
   synchronization (:mod:`topology`, :mod:`barrier`, :mod:`barrier_sim`),
-  bank-aware counter placement (:mod:`placement`), one-compile
-  design-space sweeps and the exhaustive mixed-radix x placement tuner
-  (:mod:`sweep`, :mod:`tuning`), the kernel arrival-time models
-  (:mod:`workloads`) and the full 5G OFDM + beamforming application
-  (:mod:`fiveg`).
+  bank-aware counter placement (:mod:`placement`), per-barrier energy
+  accounting and the hardware event-unit primitive (:mod:`energy`,
+  :func:`barrier.hw_event_unit`), one-compile design-space sweeps and
+  the exhaustive mixed-radix x placement tuner with latency x energy
+  Pareto selection (:mod:`sweep`, :mod:`tuning`), the kernel
+  arrival-time models (:mod:`workloads`) and the full 5G OFDM +
+  beamforming application (:mod:`fiveg`).
 * **TPU transplant** — radix-tunable hierarchical collective schedules
   and partial synchronization for pod-scale training/serving
   (:mod:`collectives`).
 """
-from . import (barrier, barrier_sim, collectives, fiveg, placement, sweep,
-               topology, tuning, workloads)
+from . import (barrier, barrier_sim, collectives, energy, fiveg, placement,
+               sweep, topology, tuning, workloads)
 from .barrier import (BarrierSchedule, LevelTable, all_radices,
                       central_counter, compose, counter_width, describe,
-                      kary_tree, level_table, mixed_radix_tree,
-                      partial_barrier, schedule_name, stack_tables)
+                      hw_event_unit, kary_tree, level_table,
+                      mixed_radix_tree, partial_barrier, schedule_name,
+                      stack_tables)
+from .energy import DEFAULT_ENERGY, EnergyModel, energy_reference
 from .barrier_sim import (BarrierResult, mean_span_cycles, overhead_fraction,
                           simulate, simulate_reference, simulate_table,
                           uniform_arrivals)
@@ -32,28 +36,33 @@ from .sweep import (ArrivalSweepResult, SweepResult, best_radix_per_delay,
                     radix_tables, simulate_radices, simulate_schedules,
                     sweep_arrivals, sweep_barrier, sweep_schedules)
 from .topology import DEFAULT, TeraPoolConfig
-from .tuning import (TunedPoint, WorkloadPoint, all_schedules,
+from .tuning import (ParetoPoint, TunedPoint, WorkloadPoint, all_schedules,
                      best_per_delay, best_per_kernel, best_placed_schedule,
                      best_schedule, enumerate_compositions,
-                     hierarchy_compositions, pareto_schedules, tune_barrier,
-                     tune_for_arrivals, tune_for_workload, tuned_for_workload,
-                     sweep_workloads)
+                     hierarchy_compositions, pareto_front, pareto_schedules,
+                     tune_barrier, tune_for_arrivals, tune_for_workload,
+                     tuned_for_workload, sweep_workloads)
 from .workloads import ARRIVAL_KERNELS, FIG6_KERNELS, arrival_batch
 
 __all__ = [
     "ARRIVAL_KERNELS", "ArrivalSweepResult", "BarrierResult",
-    "BarrierSchedule", "CounterPlacement", "DEFAULT", "FIG6_KERNELS",
-    "FLAT", "HIERARCHICAL", "LevelTable", "STRATEGIES", "SweepResult",
+    "BarrierSchedule", "CounterPlacement", "DEFAULT", "DEFAULT_ENERGY",
+    "EnergyModel", "FIG6_KERNELS",
+    "FLAT", "HIERARCHICAL", "LevelTable", "ParetoPoint", "STRATEGIES",
+    "SweepResult",
     "SyncConfig", "TeraPoolConfig", "TunedPoint", "WorkloadPoint",
     "all_placements", "all_radices", "all_schedules", "arrival_batch",
     "barrier", "barrier_sim", "best_per_delay", "best_per_kernel",
     "best_placed_schedule", "best_radix_per_delay",
     "best_schedule", "central_counter", "collectives", "compose",
-    "counter_width", "derive_latencies", "describe",
+    "counter_width", "derive_latencies", "describe", "energy",
+    "energy_reference",
     "enumerate_compositions", "explicit_placement", "fiveg",
-    "gather_param", "hierarchy_compositions", "kary_tree", "level_table",
+    "gather_param", "hierarchy_compositions", "hw_event_unit",
+    "kary_tree", "level_table",
     "make_factored_mesh", "mean_span_cycles", "mixed_radix_tree",
-    "overhead_fraction", "pareto_schedules", "partial_barrier",
+    "overhead_fraction", "pareto_front", "pareto_schedules",
+    "partial_barrier",
     "partial_psum", "place_counters", "placement", "radix_tables",
     "schedule_name", "shard_slice", "simulate", "simulate_placed_reference",
     "simulate_radices", "simulate_schedules", "simulate_reference",

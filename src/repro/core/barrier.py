@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .energy import DEFAULT_ENERGY, EnergyModel, schedule_energy_constants
 from .topology import DEFAULT, TeraPoolConfig
 
 
@@ -51,12 +52,18 @@ class BarrierSchedule:
 
     ``radix`` is the uniform radix for k-ary trees and ``0`` for a
     genuinely mixed-radix composition (no single k describes it).
+
+    ``hw`` marks a hardware event-unit barrier
+    (:func:`hw_event_unit`): the levels describe the unit's
+    aggregation stages (combinational, no shared-counter atomics, no
+    per-level software path) instead of counter tree levels.
     """
 
     n_pes: int                 # PEs synchronized by this barrier
     radix: int
     levels: tuple              # tuple[Level, ...]
     partial: bool = False      # True if a subset-of-cluster barrier
+    hw: bool = False           # True if a hardware event-unit barrier
 
     @property
     def n_levels(self) -> int:
@@ -179,6 +186,56 @@ def partial_barrier(group_pes: int, radix: int,
     return kary_tree(radix, n_pes=group_pes, cfg=cfg, partial=True)
 
 
+def _hw_segments(n: int, cfg: TeraPoolConfig) -> tuple:
+    """Aggregation-stage sizes of the event unit over ``n`` PEs: the
+    physical Tile / Group / cluster fan-in hierarchy, greedily factored
+    so non-power-of-two counts (768, 1536, asymmetric multi-cluster
+    shapes) still cover ``n`` exactly — any leftover factor becomes one
+    final stage."""
+    dims = [cfg.pes_per_tile, cfg.tiles_per_group, cfg.n_groups]
+    if getattr(cfg, "n_clusters", 1) > 1:
+        dims.append(cfg.n_clusters)
+    rem = int(n)
+    segs: List[int] = []
+    for d in dims:
+        g = math.gcd(rem, d)
+        if g > 1:
+            segs.append(g)
+            rem //= g
+    if rem > 1:
+        segs.append(rem)
+    return tuple(segs) if segs else (1,)
+
+
+def hw_event_unit(n_pes: int | None = None,
+                  cfg: TeraPoolConfig = DEFAULT) -> BarrierSchedule:
+    """The hardware synchronization/event-unit barrier of Glaser et al.
+    (arXiv 2004.06662), as a schedule next to the software trees.
+
+    Each PE signals arrival with ONE store to the unit's trigger
+    register (``cfg.hw_entry_instr`` cycles of software — no counter
+    atomics, no polling); the unit's combinational aggregation tree
+    resolves a stage per ``cfg.hw_level_cycles`` (a stage spanning
+    multiple clusters pays ``lat_remote`` instead), and the root fires
+    the broadcast wakeup lines, resuming every WFI-slept core at once.
+    Stages follow the physical Tile/Group/cluster fan-in
+    (:func:`_hw_segments`), so the schedule algebra, level tables and
+    both simulator cores treat it exactly like any other schedule —
+    with zero per-level software overhead and no bank serialization.
+    """
+    n = int(n_pes if n_pes is not None else cfg.n_pes)
+    _check_size(n, "n_pes")
+    if n > cfg.n_pes:
+        raise ValueError(f"schedule spans {n} PEs, cluster has {cfg.n_pes}")
+    levels: List[Level] = []
+    span = 1
+    for g in _hw_segments(n, cfg):
+        span *= g
+        levels.append(Level(group_size=g, span=span,
+                            latency=cfg.hw_stage_latency(span)))
+    return BarrierSchedule(n_pes=n, radix=0, levels=tuple(levels), hw=True)
+
+
 def all_radices(n_pes: int | None = None,
                 cfg: TeraPoolConfig = DEFAULT) -> Sequence[int]:
     """Every valid uniform radix: the divisors >= 2 of ``N`` (for
@@ -219,13 +276,15 @@ def schedule_name(schedule: BarrierSchedule, placement=None) -> str:
     ``"8x16x8@leaf_local"``) — the one label format every sweep result
     and 5G report uses."""
     base = "x".join(str(g) for g in schedule.sizes)
+    base = ("hw" + base) if schedule.hw else base
     base += "p" if schedule.partial else ""
     return base + (f"@{placement.strategy}" if placement else "")
 
 
 def describe(schedule: BarrierSchedule) -> str:
     """One-line human description of a schedule's structure."""
-    kind = (f"central counter" if schedule.n_levels == 1
+    kind = ("hardware event unit" if schedule.hw
+            else f"central counter" if schedule.n_levels == 1
             and schedule.levels[0].group_size == schedule.n_pes
             else f"radix-{schedule.radix} tree" if schedule.radix
             else "mixed-radix tree")
@@ -262,6 +321,21 @@ class LevelTable(NamedTuple):
     bit-for-bit.  Sibling counters mapped to the SAME bank id contend:
     the scanned core serializes atomics per bank, not per counter.
 
+    ``service_cycles`` and ``entry_instr`` make the *primitive* itself
+    table data: software trees carry the bank service interval and the
+    barrier-entry instruction path, the hardware event unit
+    (:func:`hw_event_unit`) carries zeros and its trigger-store cost —
+    with a zero service interval the per-bank max-plus scan degenerates
+    to the plain group max, i.e. parallel single-cycle aggregation, so
+    hardware and software barriers share one compiled program.
+
+    ``energy_static`` / ``active_cycles`` / ``idle_power`` are the
+    per-episode energy scalars of :func:`repro.core.energy.
+    schedule_energy_constants`; the cores combine them with the
+    episode's mean residency (:func:`repro.core.energy.episode_energy`)
+    so the energy column is traced data too — a different
+    :class:`~repro.core.energy.EnergyModel` never recompiles anything.
+
     Being a NamedTuple of arrays, a table is a JAX pytree: it can be
     ``vmap``-ed over a stacked leading axis (see :func:`stack_tables`)
     and fed straight through ``lax.scan``.
@@ -272,6 +346,12 @@ class LevelTable(NamedTuple):
     instr_cycles: jnp.ndarray   # (L,) float32, 0 past the real depth
     bank_ids: jnp.ndarray       # (L, G) int32 counter -> bank, distinct
                                 # identity banks past the real depth
+    service_cycles: jnp.ndarray  # (L,) float32 bank service interval,
+                                 # 0 for hw stages and padding
+    entry_instr: jnp.ndarray    # () float32 barrier-entry software path
+    energy_static: jnp.ndarray  # () float32 pJ, arrival-independent
+    active_cycles: jnp.ndarray  # () float32 episode instruction cycles
+    idle_power: jnp.ndarray     # () float32 pJ per idle PE-cycle
 
     @property
     def max_levels(self) -> int:
@@ -392,11 +472,24 @@ def telescope_widths(table: LevelTable, n_pes: int) -> tuple | None:
 
 @functools.lru_cache(maxsize=None)
 def _level_table_cached(schedule: BarrierSchedule, max_levels: int,
-                        cfg: TeraPoolConfig, placement) -> LevelTable:
+                        cfg: TeraPoolConfig, placement,
+                        energy_model: EnergyModel) -> LevelTable:
     n = schedule.n_pes
     width = counter_width(n)
     sizes = [lvl.group_size for lvl in schedule.levels]
-    instr = [float(cfg.instr_per_level)] * len(sizes)
+    if schedule.hw:
+        if placement is not None:
+            raise ValueError(
+                "hardware event-unit barriers have no counters to place")
+        # The event unit has no software level path and no bank
+        # serialization: signals aggregate combinationally per stage.
+        instr = [0.0] * len(sizes)
+        svc = [0.0] * len(sizes)
+        entry = float(cfg.hw_entry_instr)
+    else:
+        instr = [float(cfg.instr_per_level)] * len(sizes)
+        svc = [float(cfg.bank_service_cycles)] * len(sizes)
+        entry = float(cfg.instr_per_level)
     pad = max_levels - len(sizes)
     if pad < 0:
         raise ValueError(
@@ -435,17 +528,24 @@ def _level_table_cached(schedule: BarrierSchedule, max_levels: int,
         lat_rows.append([0.0] * width)
         bank_rows.append(list(range(width)))
 
+    stat, act, idle = schedule_energy_constants(
+        schedule, placement, cfg, energy_model)
     return validate_tail_padding(LevelTable(
         group_sizes=jnp.asarray(sizes + [1] * pad, jnp.int32),
         latencies=jnp.asarray(lat_rows, jnp.float32),
         instr_cycles=jnp.asarray(instr + [0.0] * pad, jnp.float32),
         bank_ids=jnp.asarray(bank_rows, jnp.int32),
+        service_cycles=jnp.asarray(svc + [0.0] * pad, jnp.float32),
+        entry_instr=jnp.float32(entry),
+        energy_static=jnp.asarray(stat, jnp.float32),
+        active_cycles=jnp.asarray(act, jnp.float32),
+        idle_power=jnp.asarray(idle, jnp.float32),
     ))
 
 
 def level_table(schedule: BarrierSchedule, max_levels: int | None = None,
-                cfg: TeraPoolConfig = DEFAULT, *,
-                placement=None) -> LevelTable:
+                cfg: TeraPoolConfig = DEFAULT, *, placement=None,
+                energy_model: EnergyModel = DEFAULT_ENERGY) -> LevelTable:
     """Encode ``schedule`` as a padded :class:`LevelTable`.
 
     ``max_levels`` defaults to ``log2(schedule.n_pes)`` so that *all*
@@ -453,16 +553,20 @@ def level_table(schedule: BarrierSchedule, max_levels: int | None = None,
     and hence one compiled simulator.  ``placement`` (a
     :class:`~repro.core.placement.CounterPlacement`) supplies explicit
     per-counter banks and latencies; ``None`` falls back to the legacy
-    span heuristic with conflict-free banks.
+    span heuristic with conflict-free banks.  ``energy_model`` prices
+    the schedule's energy scalars (:mod:`repro.core.energy`); being
+    table data, swapping models never recompiles a core.
     """
     if max_levels is None:
         max_levels = max_depth(schedule.n_pes)
-    return _level_table_cached(schedule, int(max_levels), cfg, placement)
+    return _level_table_cached(schedule, int(max_levels), cfg, placement,
+                               energy_model)
 
 
 def stack_tables(schedules: Sequence[BarrierSchedule],
                  cfg: TeraPoolConfig = DEFAULT,
-                 placements: Sequence | None = None) -> LevelTable:
+                 placements: Sequence | None = None,
+                 energy_model: EnergyModel = DEFAULT_ENERGY) -> LevelTable:
     """Stack the tables of same-``n_pes`` schedules along a new leading
     axis, ready to ``vmap`` one compiled simulate over the whole radix
     (or radix x placement) sweep.  ``placements`` aligns with
@@ -479,7 +583,8 @@ def stack_tables(schedules: Sequence[BarrierSchedule],
             f"{len(schedules)} schedules but {len(placements)} placements")
     depth = max(max_depth(n),
                 max(s.n_levels for s in schedules))
-    tables = [level_table(s, depth, cfg, placement=p)
+    tables = [level_table(s, depth, cfg, placement=p,
+                          energy_model=energy_model)
               for s, p in zip(schedules, placements)]
     # Each row was fully validated when level_table built it; the
     # stacked check keeps only the cheap group-size suffix test (no

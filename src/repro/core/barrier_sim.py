@@ -61,6 +61,8 @@ import jax.numpy as jnp
 
 from .barrier import (BarrierSchedule, LevelTable, default_widths,
                       level_table, telescope_widths, validate_tail_padding)
+from .energy import (DEFAULT_ENERGY, EnergyModel, episode_energy,
+                     schedule_energy_constants)
 from .topology import DEFAULT, TeraPoolConfig
 
 
@@ -97,16 +99,18 @@ def core_traces() -> int:
 
 
 class BarrierResult(NamedTuple):
-    """Timing of one barrier episode (all in cycles)."""
+    """Timing (cycles) and energy (pJ) of one barrier episode."""
 
     exit_time: jnp.ndarray        # scalar: cycle at which every PE resumes
     last_arrival: jnp.ndarray     # scalar: cycle the last PE entered
     span_cycles: jnp.ndarray      # exit_time - last_arrival  (Fig. 4a metric)
     mean_residency: jnp.ndarray   # mean over PEs of (exit - own arrival)
+    energy: jnp.ndarray           # scalar: episode energy, pJ
+                                  # (repro.core.energy.episode_energy)
 
 
 def _serialize_group(ready: jnp.ndarray, latency: int,
-                     cfg: TeraPoolConfig) -> jnp.ndarray:
+                     cfg: TeraPoolConfig, svc=None) -> jnp.ndarray:
     """Serialize atomics within each group (rows of ``ready``).
 
     ``ready[g, j]`` is the cycle PE j of group g issues its atomic.  The
@@ -117,9 +121,11 @@ def _serialize_group(ready: jnp.ndarray, latency: int,
     With sorted issue times a_(1..k), service start of the j-th request is
         s_j = max_{i<=j} ( a_i + (j - i) * svc )
             = j*svc + cummax( a_j - j*svc )
-    — a max-plus prefix scan, fully vectorized.
+    — a max-plus prefix scan, fully vectorized.  ``svc`` overrides the
+    config's service interval (0 for the hardware event unit, whose
+    aggregation stages accept all inputs in parallel).
     """
-    svc = cfg.bank_service_cycles
+    svc = cfg.bank_service_cycles if svc is None else svc
     a = jnp.sort(ready, axis=-1)
     j = jnp.arange(a.shape[-1], dtype=a.dtype) * svc
     start = jax.lax.cummax(a - j, axis=a.ndim - 1) + j
@@ -177,14 +183,14 @@ def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
     arrivals = jnp.asarray(arrivals, jnp.float32)
     idx = jnp.arange(n)
     width = table.bank_ids.shape[-1]
-    svc = jnp.float32(cfg.bank_service_cycles)
 
-    # Level 0 entry: call, address computation, atomic issue.
-    ready0 = arrivals + cfg.instr_per_level
+    # Level 0 entry: call, address computation, atomic issue (or, for
+    # the hardware event unit, the single trigger-register store).
+    ready0 = arrivals + table.entry_instr
 
     def step(carry, level):
         ready, m = carry
-        g, lat_col, instr, bank_col = level
+        g, lat_col, instr, bank_col, svc = level
         grp = idx // g
         # Masked tail slots can index past the counter columns; clip —
         # their +inf ready times sort to the back of any bank queue
@@ -216,16 +222,19 @@ def _scan_core(arrivals: jnp.ndarray, table: LevelTable,
 
     TRACE_COUNTS["scan_core"] += 1
     levels = (table.group_sizes, table.latencies, table.instr_cycles,
-              table.bank_ids)
+              table.bank_ids, table.service_cycles)
     (ready, _), _ = jax.lax.scan(step, (ready0, jnp.int32(n)), levels)
 
     exit_time = ready[0] + cfg.wakeup_cycles
     last_arrival = jnp.max(arrivals, axis=-1)
+    mean_res = jnp.mean(exit_time[..., None] - arrivals, axis=-1)
     return BarrierResult(
         exit_time=exit_time,
         last_arrival=last_arrival,
         span_cycles=exit_time - last_arrival,
-        mean_residency=jnp.mean(exit_time[..., None] - arrivals, axis=-1),
+        mean_residency=mean_res,
+        energy=episode_energy(table.energy_static, table.active_cycles,
+                              table.idle_power, n, mean_res),
     )
 
 
@@ -275,7 +284,6 @@ def _telescope_core(arrivals: jnp.ndarray, table: LevelTable,
     arrivals = jnp.asarray(arrivals, jnp.float32)
     width = table.bank_ids.shape[-1]
     depth = table.group_sizes.shape[-1]
-    svc = jnp.float32(cfg.bank_service_cycles)
 
     if widths is None:
         widths = default_widths(n, depth)
@@ -286,14 +294,16 @@ def _telescope_core(arrivals: jnp.ndarray, table: LevelTable,
 
     TRACE_COUNTS["telescope_core"] += 1
 
-    # Level 0 entry: call, address computation, atomic issue.
-    ready = arrivals + cfg.instr_per_level
+    # Level 0 entry: call, address computation, atomic issue (or, for
+    # the hardware event unit, the single trigger-register store).
+    ready = arrivals + table.entry_instr
     m = jnp.int32(n)
     for i in range(depth):
         w = min(int(widths[i]), n)
         ready = ready[:w]
         idx = jnp.arange(w)
         g = table.group_sizes[i]
+        svc = table.service_cycles[i]
         grp = idx // g
         # Masked tail slots can index past the counter columns; clip —
         # their +inf ready times sort to the back of any bank queue
@@ -320,11 +330,14 @@ def _telescope_core(arrivals: jnp.ndarray, table: LevelTable,
 
     exit_time = ready[0] + cfg.wakeup_cycles
     last_arrival = jnp.max(arrivals, axis=-1)
+    mean_res = jnp.mean(exit_time[..., None] - arrivals, axis=-1)
     return BarrierResult(
         exit_time=exit_time,
         last_arrival=last_arrival,
         span_cycles=exit_time - last_arrival,
-        mean_residency=jnp.mean(exit_time[..., None] - arrivals, axis=-1),
+        mean_residency=mean_res,
+        energy=episode_energy(table.energy_static, table.active_cycles,
+                              table.idle_power, n, mean_res),
     )
 
 
@@ -387,7 +400,8 @@ def simulate_table(arrivals: jnp.ndarray, table: LevelTable,
 
 def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
              cfg: TeraPoolConfig = DEFAULT, *,
-             placement=None, core: str | None = None) -> BarrierResult:
+             placement=None, core: str | None = None,
+             energy_model: EnergyModel = DEFAULT_ENERGY) -> BarrierResult:
     """Simulate one barrier episode (or a leading batch of them).
 
     Args:
@@ -399,6 +413,8 @@ def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
         legacy span-heuristic latencies with conflict-free banks.
       core: simulator implementation, ``"telescope"`` (default) or
         ``"scan"`` (the bit-for-bit oracle core).
+      energy_model: per-event cost model pricing the ``energy`` column
+        (:mod:`repro.core.energy`).
 
     Returns:
       :class:`BarrierResult` with the leading batch shape of ``arrivals``.
@@ -408,12 +424,15 @@ def simulate(arrivals: jnp.ndarray, schedule: BarrierSchedule,
         raise ValueError(
             f"arrivals has {arrivals.shape[-1]} PEs, schedule expects "
             f"{schedule.n_pes}")
-    table = level_table(schedule, cfg=cfg, placement=placement)
+    table = level_table(schedule, cfg=cfg, placement=placement,
+                        energy_model=energy_model)
     return simulate_table(arrivals, table, cfg, core=core)
 
 
 def simulate_reference(arrivals: jnp.ndarray, schedule: BarrierSchedule,
-                       cfg: TeraPoolConfig = DEFAULT) -> BarrierResult:
+                       cfg: TeraPoolConfig = DEFAULT,
+                       energy_model: EnergyModel = DEFAULT_ENERGY
+                       ) -> BarrierResult:
     """The seed per-level Python loop, kept as the equivalence oracle.
 
     Retraces per schedule (shape-changing reshapes); use only in tests
@@ -425,26 +444,39 @@ def simulate_reference(arrivals: jnp.ndarray, schedule: BarrierSchedule,
             f"arrivals has {arrivals.shape[-1]} PEs, schedule expects "
             f"{schedule.n_pes}")
 
+    # The hardware event unit replaces the software level path: one
+    # trigger store on entry, parallel (unserialized) stage
+    # aggregation, zero per-level bookkeeping.
+    hw = schedule.hw
+    entry = cfg.hw_entry_instr if hw else cfg.instr_per_level
+    instr = 0 if hw else cfg.instr_per_level
+    svc = 0 if hw else None
+
     # Ready time of the survivors entering the current level.  Level 0:
     # every PE, offset by the per-level software path (call, address
     # computation, atomic issue).
-    ready = arrivals + cfg.instr_per_level
+    ready = arrivals + entry
     for lvl in schedule.levels:
         grouped = ready.reshape(ready.shape[:-1] + (-1, lvl.group_size))
-        done = _serialize_group(grouped, lvl.latency, cfg)
+        done = _serialize_group(grouped, lvl.latency, cfg, svc=svc)
         # Survivors run the compare/branch + counter-reset + next-level
         # setup before issuing the next atomic.
-        ready = done + cfg.instr_per_level
+        ready = done + instr
 
     # ``ready`` is now (..., 1): the final survivor after its bookkeeping.
     final = ready[..., 0]
     exit_time = final + cfg.wakeup_cycles
     last_arrival = jnp.max(arrivals, axis=-1)
+    mean_res = jnp.mean(exit_time[..., None] - arrivals, axis=-1)
+    stat, act, idle = schedule_energy_constants(
+        schedule, None, cfg, energy_model)
     return BarrierResult(
         exit_time=exit_time,
         last_arrival=last_arrival,
         span_cycles=exit_time - last_arrival,
-        mean_residency=jnp.mean(exit_time[..., None] - arrivals, axis=-1),
+        mean_residency=mean_res,
+        energy=episode_energy(jnp.float32(stat), jnp.float32(act),
+                              jnp.float32(idle), schedule.n_pes, mean_res),
     )
 
 

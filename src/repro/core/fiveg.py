@@ -22,6 +22,12 @@ Barrier options (the paper's comparison):
                         the counters (:mod:`repro.core.placement`), so
                         bank contention and access locality are tuned
                         together with the tree shape.
+  * ``hw``            — the hardware event-unit barrier
+                        (:func:`repro.core.barrier.hw_event_unit`,
+                        after Glaser et al.'s SCU): single-cycle
+                        aggregation stages plus broadcast wakeup —
+                        the latency AND energy floor every software
+                        tree is measured against.
   * ``workload``      — per-EPOCH workload specialization: the stage
                         barriers are tuned (jointly with placement) on
                         the FFT butterfly-stage arrival model, and the
@@ -56,6 +62,7 @@ import jax.numpy as jnp
 from . import barrier, barrier_sim
 from .barrier import LevelTable
 from .barrier_sim import core_fn
+from .energy import DEFAULT_ENERGY, EnergyModel
 from .topology import DEFAULT, TeraPoolConfig
 
 
@@ -121,6 +128,9 @@ class FiveGResult(NamedTuple):
     sync_fraction: jnp.ndarray     # sync_cycles / total_cycles
     serial_cycles: jnp.ndarray     # single-Snitch-core runtime
     speedup_serial: jnp.ndarray    # serial / parallel
+    sync_energy: jnp.ndarray       # pJ spent inside barriers, all PEs
+    total_energy: jnp.ndarray      # sync_energy + compute instruction pJ
+    energy_fraction: jnp.ndarray   # sync_energy / total_energy
     # Winning schedule names (static metadata, not arrays): the stage
     # and FFT->MATMUL/global barrier trees this run synchronized with,
     # "@strategy"-suffixed where a tuned counter placement is attached.
@@ -253,6 +263,10 @@ def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
     elif sync == "placed":
         stage_sched, stage_plc = _placed_schedule(n, jitter, cfg)
         partial_groups = 1
+    elif sync == "hw":
+        stage_sched = barrier.hw_event_unit(cfg=cfg)
+        global_sched = stage_sched
+        partial_groups = 1
     elif sync == "workload":
         (stage_sched, stage_plc,
          global_sched, global_plc) = _workload_schedules(app, cfg)
@@ -290,48 +304,67 @@ def _app_core(key: jax.Array, stage_table: LevelTable,
     fft_pes = n_pes // partial_groups
 
     def epoch(carry, k):
-        t, acc = carry
+        t, acc, acc_e = carry
         arr = _epoch_arrivals(k, t, epoch_work, jitter, n_pes)
         if partial_groups > 1:
             grp = arr.reshape(partial_groups, fft_pes)
             res = jax.vmap(lambda a: sim(a, stage_table, cfg))(grp)
             t = jnp.repeat(res.exit_time, fft_pes)
             acc = acc + jnp.mean(res.mean_residency)
+            acc_e = acc_e + jnp.sum(res.energy)
         else:
             res = sim(arr, stage_table, cfg)
             t = jnp.full((n_pes,), res.exit_time)
             acc = acc + res.mean_residency
-        return (t, acc), None
+            acc_e = acc_e + res.energy
+        return (t, acc, acc_e), None
 
     t = jnp.zeros((n_pes,), jnp.float32)   # per-PE current time
     sync_acc = jnp.asarray(0.0)            # accumulated mean barrier cycles
-    (t, sync_acc), _ = jax.lax.scan(epoch, (t, sync_acc), keys[:n_epochs])
+    energy_acc = jnp.asarray(0.0)          # accumulated barrier energy (pJ)
+    (t, sync_acc, energy_acc), _ = jax.lax.scan(
+        epoch, (t, sync_acc, energy_acc), keys[:n_epochs])
 
     # FFT -> beamforming data dependency: one global barrier.
     res = sim(t, global_table, cfg)
     t = jnp.full((n_pes,), res.exit_time)
     sync_acc = sync_acc + res.mean_residency
+    energy_acc = energy_acc + res.energy
 
     # Beamforming MATMUL: (N_B x N_RX) @ (N_RX x N_SC), column-wise over
     # all PEs; concurrent row reads -> moderate contention scatter.
     arr = _epoch_arrivals(keys[n_epochs], t, mm_work, mm_jitter, n_pes)
     res = sim(arr, global_table, cfg)
-    return res.exit_time, sync_acc + res.mean_residency
+    return (res.exit_time, sync_acc + res.mean_residency,
+            energy_acc + res.energy)
+
+
+def _compute_energy(app: FiveGConfig, n: int, n_epochs: int,
+                    model: EnergyModel) -> jnp.ndarray:
+    """Instruction energy of the application's COMPUTE cycles (pJ): the
+    per-PE epoch work plus the beamforming MATMUL, across all PEs —
+    the arrival-independent denominator of ``energy_fraction``."""
+    per_pe = n_epochs * app.epoch_work + app.mm_work(n)
+    return jnp.float32(model.e_instr * n * per_pe)
 
 
 def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                  sync: str = "partial", radix: int = 32,
                  cfg: TeraPoolConfig = DEFAULT, *,
-                 core: str | None = None) -> FiveGResult:
+                 core: str | None = None,
+                 energy_model: EnergyModel = DEFAULT_ENERGY) -> FiveGResult:
     """Simulate the full OFDM + beamforming pipeline under one barrier
     strategy.  ``sync`` in {"central", "tree", "partial", "tuned",
-    "tuned_partial", "placed", "workload"}; ``radix`` is ignored by the
-    tuned, placed and workload modes (the schedule — and for
+    "tuned_partial", "placed", "workload", "hw"}; ``radix`` is ignored
+    by the tuned, placed, workload and hw modes (the schedule — and for
     ``placed``/``workload`` the counter->bank mapping too — comes from
     the mixed-radix tuner; ``workload`` additionally tunes the stage
-    and global barriers SEPARATELY on their own epoch arrival models).
+    and global barriers SEPARATELY on their own epoch arrival models;
+    ``hw`` runs every barrier on the hardware event unit).
     ``core`` selects the simulator implementation for every barrier of
-    every mode (telescope default; see :mod:`repro.core.barrier_sim`).
+    every mode (telescope default; see :mod:`repro.core.barrier_sim`);
+    ``energy_model`` prices the energy columns
+    (:mod:`repro.core.energy`).
 
     The ~25-epoch pipeline runs as one jitted ``lax.scan``; changing the
     radix — or swapping in any tuned schedule or placement of the same
@@ -342,15 +375,17 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     (stage_sched, global_sched, partial_groups, stage_plc,
      global_plc) = _resolve_schedules(app, sync, radix, cfg)
     stage_table = barrier.level_table(stage_sched, cfg=cfg,
-                                      placement=stage_plc)
+                                      placement=stage_plc,
+                                      energy_model=energy_model)
     global_table = barrier.level_table(global_sched, cfg=cfg,
-                                       placement=global_plc)
+                                       placement=global_plc,
+                                       energy_model=energy_model)
 
     epoch_work = app.epoch_work
     jitter = app.epoch_jitter
     n_epochs = app.rounds * app.n_stages
 
-    total, sync_acc = _app_core(
+    total, sync_acc, energy_acc = _app_core(
         key, stage_table, global_table, jnp.float32(epoch_work),
         jnp.float32(jitter), jnp.float32(app.mm_work(n)),
         jnp.float32(app.mm_jitter(n)), n_epochs=n_epochs,
@@ -361,6 +396,8 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     fft_work = app.n_rx * app.n_stages * app.fft_pes * app.stage_cycles
     mm_serial = app.n_beams * app.n_sc * app.n_rx * app.mac_cycles
     serial = jnp.asarray(fft_work + mm_serial, jnp.float32)
+    total_energy = _compute_energy(app, n, n_epochs, energy_model) \
+        + energy_acc
 
     return FiveGResult(
         total_cycles=total,
@@ -368,6 +405,9 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         sync_fraction=sync_acc / total,
         serial_cycles=serial,
         speedup_serial=serial / total,
+        sync_energy=energy_acc,
+        total_energy=total_energy,
+        energy_fraction=energy_acc / total_energy,
         stage_schedule=barrier.schedule_name(stage_sched, stage_plc),
         global_schedule=barrier.schedule_name(global_sched, global_plc),
     )
@@ -396,6 +436,7 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
 
     t = jnp.zeros((n,), jnp.float32)       # per-PE current time
     sync_acc = jnp.asarray(0.0)            # accumulated mean barrier cycles
+    energy_acc = jnp.asarray(0.0)          # accumulated barrier energy (pJ)
 
     keys = jax.random.split(key, n_epochs + 2)
     for e in range(n_epochs):
@@ -405,15 +446,18 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
             res = ref(grp, stage_sched, stage_plc)
             t = jnp.repeat(res.exit_time, app.fft_pes)
             sync_acc = sync_acc + jnp.mean(res.mean_residency)
+            energy_acc = energy_acc + jnp.sum(res.energy)
         else:
             res = ref(arr, stage_sched, stage_plc)
             t = jnp.full((n,), res.exit_time)
             sync_acc = sync_acc + res.mean_residency
+            energy_acc = energy_acc + res.energy
 
     # FFT -> beamforming data dependency: one global barrier.
     res = ref(t, global_sched, global_plc)
     t = jnp.full((n,), res.exit_time)
     sync_acc = sync_acc + res.mean_residency
+    energy_acc = energy_acc + res.energy
 
     # Beamforming MATMUL (see _app_core).
     arr = _epoch_arrivals(keys[-2], t, jnp.float32(app.mm_work(n)),
@@ -421,11 +465,14 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     res = ref(arr, global_sched, global_plc)
     total = res.exit_time
     sync_acc = sync_acc + res.mean_residency
+    energy_acc = energy_acc + res.energy
 
     # Serial single-core reference (no barriers, same per-PE work model).
     fft_work = app.n_rx * app.n_stages * app.fft_pes * app.stage_cycles
     mm_serial = app.n_beams * app.n_sc * app.n_rx * app.mac_cycles
     serial = jnp.asarray(fft_work + mm_serial, jnp.float32)
+    total_energy = _compute_energy(app, n, n_epochs, DEFAULT_ENERGY) \
+        + energy_acc
 
     return FiveGResult(
         total_cycles=total,
@@ -433,6 +480,9 @@ def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         sync_fraction=sync_acc / total,
         serial_cycles=serial,
         speedup_serial=serial / total,
+        sync_energy=energy_acc,
+        total_energy=total_energy,
+        energy_fraction=energy_acc / total_energy,
         stage_schedule=barrier.schedule_name(stage_sched, stage_plc),
         global_schedule=barrier.schedule_name(global_sched, global_plc),
     )
@@ -444,11 +494,12 @@ def compare_barriers(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                      modes: tuple = ("central", "tree", "partial"), *,
                      core: str | None = None) -> dict:
     """Fig. 7 comparison; returns per-strategy results + per-mode
-    speedups over the central-counter baseline.  Pass ``modes``
-    including ``"tuned"`` / ``"tuned_partial"`` / ``"placed"`` /
-    ``"workload"`` to compare the mixed-radix tuner's schedules (the
-    jointly tuned counter placement, and the per-epoch workload
-    specialization) against the fixed-radix strategies."""
+    speedups AND sync-energy ratios over the central-counter baseline.
+    Pass ``modes`` including ``"tuned"`` / ``"tuned_partial"`` /
+    ``"placed"`` / ``"workload"`` to compare the mixed-radix tuner's
+    schedules (the jointly tuned counter placement, and the per-epoch
+    workload specialization) against the fixed-radix strategies, and
+    ``"hw"`` for the hardware event-unit floor on both axes."""
     if "central" not in modes:
         raise ValueError("modes must include the 'central' baseline")
     out = {}
@@ -456,7 +507,9 @@ def compare_barriers(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         out[mode] = simulate_app(key, app, sync=mode, radix=radix, cfg=cfg,
                                  core=core)
     base = out["central"].total_cycles
+    base_energy = out["central"].sync_energy
     for mode in modes:
         if mode != "central":
             out[f"speedup_{mode}"] = base / out[mode].total_cycles
+            out[f"energy_ratio_{mode}"] = base_energy / out[mode].sync_energy
     return out

@@ -267,6 +267,8 @@ def simulate_placed_reference(arrivals, schedule: BarrierSchedule,
     and spot checks.
     """
     from .barrier_sim import BarrierResult
+    from .energy import (DEFAULT_ENERGY, episode_energy,
+                         schedule_energy_constants)
     arr = np.asarray(arrivals, np.float32)
     if arr.shape[-1] != schedule.n_pes:
         raise ValueError(
@@ -280,10 +282,18 @@ def simulate_placed_reference(arrivals, schedule: BarrierSchedule,
         np.float32) + wake
     exit_time = exits.reshape(batch)
     last = np.max(flat, axis=-1).reshape(batch)
-    resid = np.mean(exits[:, None] - flat, axis=-1).reshape(batch)
+    # Same values in, same jnp.mean reduction as the cores — so the
+    # residency-derived energy column agrees to the same precision as
+    # the exit times themselves.
+    resid = jnp.mean(jnp.asarray(exits[:, None] - flat),
+                     axis=-1).reshape(batch)
+    stat, act, idle = schedule_energy_constants(
+        schedule, placement, cfg, DEFAULT_ENERGY)
     return BarrierResult(
         exit_time=jnp.asarray(exit_time),
         last_arrival=jnp.asarray(last),
         span_cycles=jnp.asarray(exit_time - last),
-        mean_residency=jnp.asarray(resid),
+        mean_residency=resid,
+        energy=episode_energy(jnp.float32(stat), jnp.float32(act),
+                              jnp.float32(idle), schedule.n_pes, resid),
     )

@@ -92,6 +92,7 @@ class SweepResult(NamedTuple):
     last_arrival: jnp.ndarray     # (S, D, T)
     span_cycles: jnp.ndarray      # (S, D, T)
     mean_residency: jnp.ndarray   # (S, D, T)
+    energy: jnp.ndarray           # (S, D, T) episode energy, pJ
     placements: tuple = ()        # tuple[CounterPlacement | None], length S
 
     @property
@@ -115,6 +116,11 @@ class SweepResult(NamedTuple):
         """(S, D) mean per-PE barrier residency, averaged over trials."""
         return jnp.mean(self.mean_residency, axis=-1)
 
+    @property
+    def mean_energy(self) -> jnp.ndarray:
+        """(S, D) episode energy (pJ), averaged over trials."""
+        return jnp.mean(self.energy, axis=-1)
+
 
 class ArrivalSweepResult(NamedTuple):
     """Per-point timings over a (schedule[, placement], kernel, trial)
@@ -132,6 +138,7 @@ class ArrivalSweepResult(NamedTuple):
     last_arrival: jnp.ndarray     # (S, K, T)
     span_cycles: jnp.ndarray      # (S, K, T)
     mean_residency: jnp.ndarray   # (S, K, T)
+    energy: jnp.ndarray           # (S, K, T) episode energy, pJ
     placements: tuple = ()        # tuple[CounterPlacement | None], length S
 
     @property
@@ -149,6 +156,11 @@ class ArrivalSweepResult(NamedTuple):
     def mean_span(self) -> jnp.ndarray:
         """(S, K) Fig. 4a metric per kernel, averaged over trials."""
         return jnp.mean(self.span_cycles, axis=-1)
+
+    @property
+    def mean_energy(self) -> jnp.ndarray:
+        """(S, K) episode energy (pJ) per kernel, averaged over trials."""
+        return jnp.mean(self.energy, axis=-1)
 
 
 def radix_tables(radices: Sequence[int], n_pes: int | None = None,

@@ -47,6 +47,15 @@ class TeraPoolConfig:
     wakeup_trigger: int = 2
     wfi_resume: int = 8
 
+    # Hardware event unit (Glaser et al., arXiv 2004.06662: a dedicated
+    # synchronization/event unit next to the cores).  A PE signals its
+    # arrival with one store to the unit's trigger register
+    # (``hw_entry_instr`` cycles of software); the unit's combinational
+    # aggregation tree then resolves each stage in ``hw_level_cycles``
+    # — no shared-counter atomics, no per-level software path.
+    hw_entry_instr: int = 2
+    hw_level_cycles: int = 1
+
     @property
     def pes_per_group(self) -> int:
         return self.pes_per_tile * self.tiles_per_group  # 128
@@ -112,6 +121,14 @@ class TeraPoolConfig:
         """Latency for one PE to reach one bank (locality-class model)."""
         return self.span_bank_latency(pe, 1, bank)
 
+    def hw_stage_latency(self, span: int) -> int:
+        """Cycles one aggregation stage of the hardware event unit takes
+        to resolve once its last input signal is present.  Inside a
+        cluster every stage is combinational (``hw_level_cycles``)
+        regardless of span — the unit sits next to the cores, signals
+        are dedicated wires, not L1 accesses."""
+        return self.hw_level_cycles
+
 
 @dataclasses.dataclass(frozen=True)
 class MultiClusterConfig(TeraPoolConfig):
@@ -167,6 +184,14 @@ class MultiClusterConfig(TeraPoolConfig):
                 == bank // self.banks_per_cluster):
             return self.lat_remote
         return super().span_bank_latency(pe_lo, span, bank)
+
+    def hw_stage_latency(self, span: int) -> int:
+        """An aggregation stage whose span crosses a cluster boundary
+        combines per-cluster event units over the inter-cluster
+        interconnect: it pays the remote tier, not a wire delay."""
+        if span > self.pes_per_cluster:
+            return self.lat_remote
+        return super().hw_stage_latency(span)
 
 
 def multi_cluster(cluster: TeraPoolConfig = None, n_clusters: int = 4,

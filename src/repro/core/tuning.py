@@ -25,10 +25,15 @@ space:
   WHERE counters live a tuned knob next to the tree shape.
 * :func:`best_per_delay` / :func:`pareto_schedules` — selection: the
   argmin (schedule, placement) at each delay, and the schedules not
-  dominated at every delay simultaneously.
+  dominated at every delay simultaneously — optionally across BOTH the
+  cycles and energy objectives (:mod:`repro.core.energy`).
+* :func:`pareto_front` — the true 2-D latency x energy front at one
+  delay: the non-dominated (schedule, placement) design points, sorted
+  fastest-first, exposing the latency/energy budget trade-off.
 * :func:`best_placed_schedule` — the jointly tuned (schedule,
   placement) pair for one arrival scatter (the 5G ``sync="placed"``
-  mode consumes this).
+  mode consumes this).  Both selectors take ``objective=`` ("cycles" |
+  "energy" | "edp") to pick the tuning metric.
 * :func:`sweep_workloads` / :func:`best_per_kernel` /
   :func:`tune_for_workload` — WORKLOAD-conditioned tuning: the same
   one-compile grid driven by each kernel's *measured* arrival
@@ -169,7 +174,15 @@ def multicluster_schedules(cfg, *,
     """Materialize :func:`multicluster_compositions` as schedules over
     the full ``cfg.n_pes`` machine (one stacked
     :class:`~repro.core.barrier.LevelTable` shape — the whole space is
-    one compile through the sweep entry points)."""
+    one compile through the sweep entry points).
+
+    Energy folds in automatically: inter-cluster levels carry
+    ``cfg.lat_remote`` as their latency, which
+    :func:`repro.core.energy.schedule_energy_constants` prices per
+    atomic hop — so a remote-cluster counter costs ~5x a Group-local
+    one in pJ just as it does in cycles, and the 2-D
+    :func:`pareto_front` over this space trades wide low-traffic
+    inter-cluster trees against deep low-latency ones."""
     return [barrier.mixed_radix_tree(c, cfg=cfg, partial=partial)
             for c in multicluster_compositions(cfg, intra=intra,
                                                inter=inter)]
@@ -244,11 +257,19 @@ def _cross_placements(schedules: Sequence[BarrierSchedule],
                 "placements must be strategy names; pass explicit "
                 "CounterPlacements through sweep.sweep_schedules")
     scheds: List[BarrierSchedule] = []
-    placs: List[CounterPlacement] = []
+    placs: List[CounterPlacement | None] = []
     for strat in placements:
         for s in schedules:
+            if s.hw:
+                continue   # the event unit has no counters to place
             scheds.append(s)
             placs.append(placement_mod.place_counters(s, strat, cfg))
+    # Hardware event-unit schedules join the stack exactly once, with
+    # no placement — the strategy axis is meaningless for them.
+    for s in schedules:
+        if s.hw:
+            scheds.append(s)
+            placs.append(None)
     return scheds, placs
 
 
@@ -309,10 +330,47 @@ def best_per_delay(res: sweep.SweepResult) -> List[TunedPoint]:
     return out
 
 
-def pareto_schedules(res: sweep.SweepResult) -> List[BarrierSchedule]:
+_OBJECTIVE_GRIDS = ("cycles", "energy")
+
+
+def _objective_grid(res, objective: str) -> jnp.ndarray:
+    """(S, D) selection metric per objective: mean Fig. 4a span
+    (``"cycles"``), mean episode energy in pJ (``"energy"``), or their
+    product, the energy-delay product (``"edp"``)."""
+    sp = jnp.mean(res.span_cycles, axis=-1)
+    if objective == "cycles":
+        return sp
+    en = jnp.mean(res.energy, axis=-1)
+    if objective == "energy":
+        return en
+    if objective == "edp":
+        return sp * en
+    raise ValueError(
+        f"unknown objective {objective!r}; choose from "
+        f"('cycles', 'energy', 'edp')")
+
+
+def pareto_schedules(res: sweep.SweepResult,
+                     objectives: Sequence[str] = ("cycles",)
+                     ) -> List[BarrierSchedule]:
     """Schedules on the Pareto front across delays: no other schedule
-    is at least as fast at every delay and strictly faster at one."""
-    sp = np.asarray(jnp.mean(res.span_cycles, axis=-1))  # (S, D)
+    is at least as good in every (delay, objective) column and strictly
+    better in one.
+
+    ``objectives`` generalizes the front from best-by-cycles to the
+    joint latency x energy trade: with ``("cycles", "energy")`` each
+    schedule's point is its mean span AND mean energy at every delay,
+    so a schedule survives if nothing beats it across the whole 2-D
+    grid simultaneously.  The default reproduces the legacy
+    cycles-only front."""
+    cols = []
+    for obj in objectives:
+        if obj not in _OBJECTIVE_GRIDS:
+            raise ValueError(
+                f"unknown objective {obj!r}; choose from "
+                f"{_OBJECTIVE_GRIDS}")
+        cols.append(np.asarray(_objective_grid(res, obj)))
+    sp = np.concatenate(cols, axis=1)     # (S, D * n_objectives)
     keep = []
     for i in range(sp.shape[0]):
         dominated = np.any(np.all(sp <= sp[i], axis=1)
@@ -322,16 +380,55 @@ def pareto_schedules(res: sweep.SweepResult) -> List[BarrierSchedule]:
     return keep
 
 
+class ParetoPoint(NamedTuple):
+    """One non-dominated (schedule, placement) design point of the 2-D
+    latency x energy front at a single delay/kernel column."""
+
+    schedule: BarrierSchedule
+    placement: object             # CounterPlacement | None
+    name: str                     # canonical label incl. @strategy
+    mean_span: float              # cycles (Fig. 4a metric)
+    mean_energy: float            # pJ per episode
+
+
+def pareto_front(res, column: int = 0) -> List[ParetoPoint]:
+    """The true 2-D latency x energy Pareto front at one delay column
+    (:class:`~repro.core.sweep.SweepResult`) or kernel column
+    (:class:`~repro.core.sweep.ArrivalSweepResult`): every (schedule,
+    placement) point no other point beats on BOTH mean span and mean
+    energy (with one strict).  Sorted fastest-first, so the first entry
+    is the 1-D best-by-cycles winner and the last is the
+    energy-minimal design — the curve the tuner exposes to a
+    latency/energy budget trade-off."""
+    sp = np.asarray(jnp.mean(res.span_cycles, axis=-1))[:, column]
+    en = np.asarray(jnp.mean(res.energy, axis=-1))[:, column]
+    placs = res.placements or (None,) * len(res.schedules)
+    names = res.names
+    front = []
+    for i in range(sp.shape[0]):
+        dominated = np.any((sp <= sp[i]) & (en <= en[i])
+                           & ((sp < sp[i]) | (en < en[i])))
+        if not dominated:
+            front.append(ParetoPoint(
+                schedule=res.schedules[i], placement=placs[i],
+                name=names[i], mean_span=float(sp[i]),
+                mean_energy=float(en[i])))
+    return sorted(front, key=lambda p: (p.mean_span, p.mean_energy))
+
+
 def best_schedule(key, n_pes: int | None = None, delay: float = 0.0,
                   n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT, *,
                   prune: str = "none", partial: bool = False,
-                  core: str | None = None) -> BarrierSchedule:
+                  core: str | None = None,
+                  objective: str = "cycles") -> BarrierSchedule:
     """Convenience: the single tuned schedule for one arrival scatter
-    (used by the 5G ``sync="tuned"`` modes)."""
+    (used by the 5G ``sync="tuned"`` modes).  ``objective`` selects the
+    tuning metric: ``"cycles"`` (mean span — the legacy behavior),
+    ``"energy"`` (mean episode energy) or ``"edp"`` (their product)."""
     schedules = all_schedules(n_pes, cfg, prune=prune, partial=partial)
     res = tune_barrier(key, n_pes, delays=(delay,), n_trials=n_trials,
                        cfg=cfg, schedules=schedules, core=core)
-    i = int(jnp.argmin(jnp.mean(res.span_cycles, axis=-1)[:, 0]))
+    i = int(jnp.argmin(_objective_grid(res, objective)[:, 0]))
     return schedules[i]
 
 
@@ -340,18 +437,20 @@ def best_placed_schedule(key, n_pes: int | None = None, delay: float = 0.0,
                          cfg: TeraPoolConfig = DEFAULT, *,
                          prune: str = "none", partial: bool = False,
                          placements: Sequence[str] = placement_mod.STRATEGIES,
-                         core: str | None = None
+                         core: str | None = None,
+                         objective: str = "cycles"
                          ) -> Tuple[BarrierSchedule, CounterPlacement]:
     """The jointly tuned (schedule, placement) pair for one arrival
     scatter: composition x strategy through one compiled sweep (used by
     the 5G ``sync="placed"`` mode).  Because leaf-local is in the
     strategy set, the placed winner can only match or beat the
-    placement-free tuned schedule on the tuning draws."""
+    placement-free tuned schedule on the tuning draws.  ``objective``
+    selects the tuning metric as in :func:`best_schedule`."""
     schedules = all_schedules(n_pes, cfg, prune=prune, partial=partial)
     res = tune_barrier(key, n_pes, delays=(delay,), n_trials=n_trials,
                        cfg=cfg, schedules=schedules, placements=placements,
                        core=core)
-    i = int(jnp.argmin(jnp.mean(res.span_cycles, axis=-1)[:, 0]))
+    i = int(jnp.argmin(_objective_grid(res, objective)[:, 0]))
     return res.schedules[i], res.placements[i]
 
 

@@ -137,10 +137,10 @@ def code_version() -> str:
     simulator cores, the schedule/placement algebra, the sweep engine,
     the tuner and the workload models.  Any edit to the physics
     invalidates every cached schedule."""
-    from ..core import (barrier, barrier_sim, placement, sweep, topology,
-                        tuning, workloads)
+    from ..core import (barrier, barrier_sim, energy, placement, sweep,
+                        topology, tuning, workloads)
     h = hashlib.sha256()
-    for mod in (barrier, barrier_sim, placement, sweep, topology,
+    for mod in (barrier, barrier_sim, energy, placement, sweep, topology,
                 tuning, workloads):
         h.update(Path(mod.__file__).read_bytes())
         h.update(b"\x00")
@@ -235,12 +235,20 @@ def store(key: tuple, payload: dict) -> None:
 def encode_schedule(schedule) -> dict:
     """JSON form of a schedule: its level sizes + partial flag (spans
     and latencies are re-derived from ``cfg`` on decode, so the codec
-    round-trips every constructor — kary/central/partial/mixed)."""
-    return {"sizes": list(schedule.sizes), "partial": bool(schedule.partial)}
+    round-trips every constructor — kary/central/partial/mixed), plus
+    the ``hw`` event-unit flag (hw schedules re-derive their stage
+    structure from ``cfg`` too)."""
+    out = {"sizes": list(schedule.sizes), "partial": bool(schedule.partial)}
+    if getattr(schedule, "hw", False):
+        out["hw"] = True
+        out["n_pes"] = int(schedule.n_pes)
+    return out
 
 
 def decode_schedule(payload: dict, cfg):
     from ..core import barrier
+    if payload.get("hw"):
+        return barrier.hw_event_unit(int(payload["n_pes"]), cfg=cfg)
     return barrier.mixed_radix_tree(tuple(int(s) for s in payload["sizes"]),
                                     cfg=cfg, partial=bool(payload["partial"]))
 
@@ -265,11 +273,24 @@ def decode_placement(payload: Optional[dict]):
                         for row in payload["latencies"]))
 
 
-def encode_pair(schedule, placement) -> dict:
+def encode_pair(schedule, placement, objective: str = "cycles") -> dict:
+    """Encoded (schedule, placement) pair; ``objective`` records WHICH
+    metric picked this winner ("cycles", "energy", "edp" or "pareto"),
+    so operators can tell a latency-tuned entry from an energy-tuned
+    one when auditing the store."""
     return {"schedule": encode_schedule(schedule),
-            "placement": encode_placement(placement)}
+            "placement": encode_placement(placement),
+            "objective": str(objective)}
 
 
 def decode_pair(payload: dict, cfg) -> Tuple:
+    """Decode :func:`encode_pair` (tolerant of pre-energy entries that
+    lack the ``objective`` field)."""
     return (decode_schedule(payload["schedule"], cfg),
             decode_placement(payload["placement"]))
+
+
+def pair_objective(payload: dict) -> str:
+    """The objective recorded in an encoded pair ("cycles" for legacy
+    entries written before the energy subsystem)."""
+    return str(payload.get("objective", "cycles"))

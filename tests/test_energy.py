@@ -1,0 +1,347 @@
+"""Energy subsystem: per-event accounting bit-for-bit against the
+independent numpy oracle, the hardware event-unit primitive (incl.
+non-power-of-two machines), the 2-D latency x energy Pareto machinery,
+and the one-compile property of energy-carrying grids."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (barrier, barrier_sim, energy, fiveg, placement,
+                        sweep, tuning)
+from repro.core.energy import DEFAULT_ENERGY, EnergyModel
+from repro.core.placement import STRATEGIES
+from repro.core.topology import DEFAULT, TeraPoolConfig, multi_cluster
+
+KEY = jax.random.PRNGKey(0)
+
+# A non-power-of-two cluster: 768 PEs as 8 x 12 x 8 (12-Tile Groups),
+# and its 2-cluster scale-out (1536 PEs, remote tier).
+C768 = TeraPoolConfig(n_pes=768, tiles_per_group=12, n_groups=8)
+C1536 = multi_cluster(C768, n_clusters=2)
+
+
+def _cfg(n: int) -> TeraPoolConfig:
+    return DEFAULT if n == DEFAULT.n_pes else TeraPoolConfig(n_pes=n)
+
+
+def _sample_schedules(n: int, cfg):
+    """Per-class representatives of the composition space: the central
+    counter, a flat-ish tree, the binary chain, the hierarchy-matched
+    mixed tree."""
+    scheds = [barrier.central_counter(n_pes=n, cfg=cfg),
+              barrier.kary_tree(min(32, n), n_pes=n, cfg=cfg),
+              barrier.kary_tree(2, n_pes=n, cfg=cfg),
+              barrier.kary_tree(8, n_pes=n, cfg=cfg)]
+    mixed = {64: (8, 8), 256: (8, 16, 2), 1024: (8, 16, 8)}[n]
+    scheds.append(barrier.mixed_radix_tree(mixed, cfg=cfg))
+    return scheds
+
+
+# ---------------------------------------------------------------------------
+# Bit-for-bit vs the independent numpy oracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 256, 1024])
+def test_energy_matches_numpy_oracle_compositions(n):
+    """Both JAX cores AND the eager reference produce the numpy
+    oracle's energy exactly — float equality, not approx — for every
+    sampled composition; at N=64 the FULL exhaustive space."""
+    cfg = _cfg(n)
+    scheds = (tuning.all_schedules(n, cfg) if n == 64
+              else _sample_schedules(n, cfg))
+    arr = 300.0 * jax.random.uniform(KEY, (2, n))
+    for sched in scheds:
+        want = np.asarray(energy.energy_reference(arr, sched, cfg))
+        for core in ("telescope", "scan"):
+            got = barrier_sim.simulate(arr, sched, cfg, core=core).energy
+            np.testing.assert_array_equal(
+                np.asarray(got), want, err_msg=f"{sched.sizes} {core}")
+        ref = barrier_sim.simulate_reference(arr, sched, cfg).energy
+        np.testing.assert_array_equal(np.asarray(ref), want,
+                                      err_msg=f"{sched.sizes} eager-ref")
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024])
+def test_energy_matches_numpy_oracle_placements(n):
+    """Placement-aware energy (per-counter latencies priced per hop,
+    per-BANK queue exits) is bit-for-bit the numpy oracle's for every
+    named strategy."""
+    cfg = _cfg(n)
+    sched = barrier.kary_tree(8, n_pes=n, cfg=cfg)
+    arr = 300.0 * jax.random.uniform(KEY, (2, n))
+    for strat in STRATEGIES:
+        plc = placement.place_counters(sched, strat, cfg)
+        want = np.asarray(
+            energy.energy_reference(arr, sched, cfg, placement=plc))
+        for core in ("telescope", "scan"):
+            got = barrier_sim.simulate(arr, sched, cfg, placement=plc,
+                                       core=core).energy
+            np.testing.assert_array_equal(
+                np.asarray(got), want, err_msg=f"{strat} {core}")
+        ref = placement.simulate_placed_reference(arr, sched, plc,
+                                                  cfg).energy
+        np.testing.assert_array_equal(np.asarray(ref), want,
+                                      err_msg=f"{strat} placed-ref")
+
+
+def test_count_events_matches_closed_form():
+    """The deliberately-dumb counting loops and the closed-form
+    constants agree on every sampled schedule x placement."""
+    for n in (64, 1024):
+        cfg = _cfg(n)
+        for sched in _sample_schedules(n, cfg):
+            for plc in [None, placement.place_counters(
+                    sched, "leaf_local", cfg)]:
+                stat, act, idle = energy.schedule_energy_constants(
+                    sched, plc, cfg)
+                stat2, act2 = energy._count_events(sched, plc, cfg,
+                                                   DEFAULT_ENERGY)
+                assert float(stat) == float(stat2)
+                assert float(act) == float(act2)
+                assert float(idle) == float(
+                    np.float32(DEFAULT_ENERGY.idle_power))
+        hw = barrier.hw_event_unit(cfg=cfg)
+        stat, act, _ = energy.schedule_energy_constants(hw, None, cfg)
+        stat2, act2 = energy._count_events(hw, None, cfg, DEFAULT_ENERGY)
+        assert (float(stat), float(act)) == (float(stat2), float(act2))
+
+
+# ---------------------------------------------------------------------------
+# Hardware event unit: structure + exactness, incl. non-power-of-two.
+# ---------------------------------------------------------------------------
+
+def test_hw_event_unit_structure():
+    s = barrier.hw_event_unit(cfg=DEFAULT)
+    assert s.hw and s.n_pes == 1024
+    assert s.sizes == (8, 16, 8)          # Tile / Group / cluster stages
+    assert all(lvl.latency == DEFAULT.hw_level_cycles for lvl in s.levels)
+    assert barrier.schedule_name(s) == "hw8x16x8"
+    assert "hardware event unit" in barrier.describe(s)
+    # the remote tier of a multi-cluster machine costs lat_remote
+    s2 = barrier.hw_event_unit(cfg=C1536)
+    assert s2.sizes[-1] == 2
+    assert s2.levels[-1].latency == C1536.lat_remote
+    with pytest.raises(ValueError):
+        barrier.level_table(
+            barrier.hw_event_unit(cfg=DEFAULT), cfg=DEFAULT,
+            placement=placement.place_counters(
+                barrier.kary_tree(8), "leaf_local", DEFAULT))
+
+
+@pytest.mark.parametrize("cfg", [C768, C1536],
+                         ids=["N768", "N1536-2cluster"])
+def test_hw_exact_nonpow2(cfg):
+    """hw primitive at non-power-of-two N: both cores == eager
+    reference == numpy oracle, every field, bit for bit."""
+    sched = barrier.hw_event_unit(cfg=cfg)
+    arr = 200.0 * jax.random.uniform(KEY, (2, cfg.n_pes))
+    ref = barrier_sim.simulate_reference(arr, sched, cfg)
+    for core in ("telescope", "scan"):
+        got = barrier_sim.simulate(arr, sched, cfg, core=core)
+        for name, a, b in zip(got._fields, got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{core}: {name}")
+    np.testing.assert_array_equal(
+        np.asarray(ref.energy),
+        np.asarray(energy.energy_reference(arr, sched, cfg)))
+
+
+@pytest.mark.parametrize("n", [256, 1024])
+def test_hw_dominates_software(n):
+    """Glaser et al.'s qualitative headline on TeraPool: the event-unit
+    barrier beats EVERY software design on both cycles and energy."""
+    cfg = _cfg(n)
+    scheds = _sample_schedules(n, cfg)
+    res = sweep.sweep_schedules(KEY, scheds, delays=(0.0, 200.0),
+                                n_trials=8, cfg=cfg)
+    hw = sweep.sweep_schedules(KEY, [barrier.hw_event_unit(cfg=cfg)],
+                               delays=(0.0, 200.0), n_trials=8, cfg=cfg)
+    assert float(jnp.max(hw.mean_span)) < float(jnp.min(res.mean_span))
+    assert float(jnp.max(hw.mean_energy)) < float(jnp.min(res.mean_energy))
+
+
+# ---------------------------------------------------------------------------
+# 2-D latency x energy Pareto machinery.
+# ---------------------------------------------------------------------------
+
+def test_pareto_front_n1024_acceptance():
+    """The acceptance-criterion front: the exhaustive N=1024 space at
+    simultaneous arrival holds >= 3 mutually non-dominated software
+    designs (deep trees win cycles, wide trees win energy), the 1-D
+    best-by-cycles point leads the front, and the hw point dominates
+    all of it."""
+    res = tuning.tune_barrier(
+        KEY, 1024, delays=(0.0,), n_trials=4, cfg=DEFAULT,
+        schedules=tuning.all_schedules(1024, DEFAULT, prune="none"))
+    front = tuning.pareto_front(res)
+    assert len(front) >= 3
+    # sorted fastest-first; the head is the 1-D best-by-cycles winner
+    spans = np.asarray(jnp.mean(res.span_cycles, axis=-1))[:, 0]
+    assert front[0].mean_span == pytest.approx(float(spans.min()))
+    # mutually non-dominated: energy strictly decreases as span grows
+    for a, b in zip(front, front[1:]):
+        assert a.mean_span < b.mean_span
+        assert a.mean_energy > b.mean_energy
+    # the hw point dominates the entire software front
+    hw = sweep.sweep_schedules(KEY, [barrier.hw_event_unit(cfg=DEFAULT)],
+                               delays=(0.0,), n_trials=4, cfg=DEFAULT)
+    hw_span = float(hw.mean_span[0, 0])
+    hw_energy = float(hw.mean_energy[0, 0])
+    assert all(hw_span < p.mean_span and hw_energy < p.mean_energy
+               for p in front)
+    # the generalized pareto_schedules front keeps a best-by-cycles
+    # schedule (span ties CAN drop out of the 2-D front: of two
+    # equal-span designs the higher-energy one is now dominated)
+    both = tuning.pareto_schedules(res, objectives=("cycles", "energy"))
+    ids = {id(s) for s in both}
+    kept = [spans[i] for i, s in enumerate(res.schedules) if id(s) in ids]
+    assert min(kept) == pytest.approx(float(spans.min()))
+
+
+def test_objective_selectors():
+    key = jax.random.PRNGKey(3)
+    res = tuning.tune_barrier(key, 64, delays=(0.0,), n_trials=4)
+    sp = jnp.mean(res.span_cycles, axis=-1)[:, 0]
+    en = jnp.mean(res.energy, axis=-1)[:, 0]
+    by_cycles = tuning.best_schedule(key, 64, n_trials=4)
+    by_energy = tuning.best_schedule(key, 64, n_trials=4,
+                                     objective="energy")
+    by_edp = tuning.best_schedule(key, 64, n_trials=4, objective="edp")
+    assert by_cycles.sizes == res.schedules[int(jnp.argmin(sp))].sizes
+    assert by_energy.sizes == res.schedules[int(jnp.argmin(en))].sizes
+    assert by_edp.sizes == res.schedules[int(jnp.argmin(sp * en))].sizes
+    with pytest.raises(ValueError):
+        tuning.best_schedule(key, 64, n_trials=4, objective="watts")
+    with pytest.raises(ValueError):
+        tuning.pareto_schedules(res, objectives=("cycles", "watts"))
+
+
+def test_hw_in_tuned_stack_once_without_placement():
+    """Crossing placements over a stack that includes the event unit
+    keeps exactly ONE hw entry (the strategy axis is meaningless for a
+    counterless barrier) with no placement attached."""
+    scheds = [barrier.kary_tree(8, n_pes=64), barrier.hw_event_unit(64)]
+    res = tuning.tune_barrier(KEY, 64, delays=(0.0,), n_trials=4,
+                              schedules=scheds,
+                              placements=("leaf_local", "group_hub"))
+    hw_rows = [i for i, s in enumerate(res.schedules) if s.hw]
+    assert len(hw_rows) == 1
+    assert res.placements[hw_rows[0]] is None
+
+
+# ---------------------------------------------------------------------------
+# One-compile property of energy-carrying grids; model swap != retrace.
+# ---------------------------------------------------------------------------
+
+def test_energy_grid_compiles_once():
+    """A sweep grid whose energy column is consumed — software trees
+    AND the hw primitive stacked together — traces the core exactly
+    once, and swapping the EnergyModel reuses the compiled program
+    (the constants are traced table data)."""
+    jax.clear_caches()
+    barrier_sim.TRACE_COUNTS.clear()
+    scheds = [barrier.kary_tree(r) for r in (4, 32)] \
+        + [barrier.mixed_radix_tree((8, 16, 8)),
+           barrier.hw_event_unit(cfg=DEFAULT)]
+    res = sweep.sweep_schedules(KEY, scheds, delays=(0.0, 128.0),
+                                n_trials=4)
+    jax.block_until_ready(res.energy)
+    assert res.energy.shape == (4, 2, 4)
+    assert barrier_sim.core_traces() == 1
+
+    # Same shapes under a different cost model: still no new trace,
+    # different energy values.
+    arr = 100.0 * jax.random.uniform(KEY, (1024,))
+    e1 = barrier_sim.simulate(arr, scheds[0])
+    hot = dataclasses.replace(DEFAULT_ENERGY, e_amo_issue=99.0,
+                              p_wfi=0.4)
+    e2 = barrier_sim.simulate(arr, scheds[0], energy_model=hot)
+    jax.block_until_ready((e1.energy, e2.energy))
+    assert barrier_sim.core_traces() == 2  # one batched-episode trace
+    assert float(e2.energy) > float(e1.energy)
+    e3 = barrier_sim.simulate(
+        arr, scheds[0],
+        energy_model=dataclasses.replace(DEFAULT_ENERGY, sleep="poll"))
+    jax.block_until_ready(e3.energy)
+    assert barrier_sim.core_traces() == 2  # still no retrace
+    assert float(e3.energy) > float(e1.energy)  # polling burns more
+
+
+def test_sweep_arrivals_carries_energy():
+    scheds = [barrier.kary_tree(8, n_pes=64), barrier.hw_event_unit(64)]
+    arr = 100.0 * jax.random.uniform(KEY, (3, 5, 64))
+    cfg = _cfg(64)
+    res = sweep.sweep_arrivals(arr, scheds, cfg=cfg)
+    assert res.energy.shape == (2, 3, 5)
+    assert res.mean_energy.shape == (2, 3)
+    want = barrier_sim.simulate(arr[1], scheds[0], cfg).energy
+    np.testing.assert_array_equal(np.asarray(res.energy[0, 1]),
+                                  np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Model validation + cache codecs.
+# ---------------------------------------------------------------------------
+
+def test_energy_model_validation():
+    assert EnergyModel(sleep="poll").idle_power == EnergyModel().p_poll
+    with pytest.raises(ValueError):
+        EnergyModel(sleep="nap").idle_power
+    with pytest.raises(ValueError):
+        energy.schedule_energy_constants(
+            barrier.hw_event_unit(cfg=DEFAULT),
+            placement.place_counters(barrier.kary_tree(8), "leaf_local",
+                                     DEFAULT))
+
+
+def test_schedule_cache_hw_and_objective_roundtrip():
+    from repro.runtime import schedule_cache
+    hw = barrier.hw_event_unit(cfg=DEFAULT)
+    dec = schedule_cache.decode_schedule(
+        schedule_cache.encode_schedule(hw), DEFAULT)
+    assert dec.hw and dec.sizes == hw.sizes and dec.n_pes == hw.n_pes
+    sw = barrier.kary_tree(8)
+    dec_sw = schedule_cache.decode_schedule(
+        schedule_cache.encode_schedule(sw), DEFAULT)
+    assert not dec_sw.hw and dec_sw.sizes == sw.sizes
+    pair = schedule_cache.encode_pair(sw, None, objective="pareto")
+    assert schedule_cache.pair_objective(pair) == "pareto"
+    # legacy entries written before the energy subsystem lack the field
+    legacy = {"schedule": schedule_cache.encode_schedule(sw),
+              "placement": None}
+    assert schedule_cache.pair_objective(legacy) == "cycles"
+    assert schedule_cache.decode_pair(legacy, DEFAULT)[1] is None
+
+
+# ---------------------------------------------------------------------------
+# 5G application energy.
+# ---------------------------------------------------------------------------
+
+def test_fiveg_hw_parity_and_energy():
+    """sync="hw" through the scanned app core == the unrolled eager
+    reference, and the energy columns order as Glaser predicts."""
+    app = fiveg.FiveGConfig(n_rx=8, ffts_per_round=2)
+    got = fiveg.simulate_app(KEY, app, sync="hw")
+    ref = fiveg.simulate_app_reference(KEY, app, sync="hw")
+    for name, a, b in zip(got._fields, got, ref):
+        if isinstance(a, str):
+            assert a == b, name
+        else:
+            assert float(a) == pytest.approx(float(b), rel=1e-6), name
+    assert got.stage_schedule == "hw8x16x8"
+    central = fiveg.simulate_app(KEY, app, sync="central")
+    assert float(got.sync_energy) < float(central.sync_energy)
+    assert float(got.energy_fraction) < float(central.energy_fraction)
+    assert 0.0 < float(got.energy_fraction) < 1.0
+    assert float(got.total_energy) > float(got.sync_energy)
+
+
+def test_fiveg_compare_barriers_energy_ratios():
+    out = fiveg.compare_barriers(KEY, app=fiveg.FiveGConfig(
+        n_rx=8, ffts_per_round=2), modes=("central", "tree", "hw"))
+    assert float(out["energy_ratio_hw"]) > 1.0
+    assert float(out["energy_ratio_hw"]) > float(out["energy_ratio_tree"])
+    assert float(out["speedup_hw"]) > 1.0

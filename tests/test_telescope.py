@@ -205,9 +205,10 @@ def test_trial_chunking_bitforbit_sweep(trial_chunk):
                                trial_chunk=trial_chunk)
     _assert_bitwise(
         sweep.BarrierResult(full.exit_time, full.last_arrival,
-                            full.span_cycles, full.mean_residency),
+                            full.span_cycles, full.mean_residency,
+                            full.energy),
         (part.exit_time, part.last_arrival, part.span_cycles,
-         part.mean_residency), f"chunk={trial_chunk}")
+         part.mean_residency, part.energy), f"chunk={trial_chunk}")
 
 
 def test_trial_chunking_bitforbit_arrivals():
