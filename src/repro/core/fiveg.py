@@ -50,6 +50,7 @@ fine-grained sync vs. 1.2x / 6.2% overhead on the 4x16-FFT benchmark).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
@@ -198,6 +199,24 @@ def _placed_schedule(n_pes: int, delay: float, cfg: TeraPoolConfig):
     return sched, plc
 
 
+def _epoch_arrival_models(app: FiveGConfig, cfg: TeraPoolConfig):
+    """The two fixed-seed arrival matrices every workload-conditioned
+    5G mode tunes on: the FFT butterfly-stage model for the STAGE
+    barrier, and — for the GLOBAL barrier — the FFT->MATMUL data
+    dependency (zero scatter: the last stage barrier equalized every
+    PE) stacked with the beamforming-row epoch (5% contention scatter)
+    along the trial axis."""
+    from . import workloads
+    n = cfg.n_pes
+    k_stage, k_mm = jax.random.split(jax.random.PRNGKey(_TUNING_SEED))
+    stage_arr = workloads.arrival_batch(k_stage, "fiveg_fft_stage",
+                                        (8, n), cfg=cfg, app=app)
+    dep_arr = jnp.zeros((4, n), jnp.float32)
+    mm_arr = workloads.arrival_batch(k_mm, "fiveg_matmul_row",
+                                     (4, n), cfg=cfg, app=app)
+    return stage_arr, jnp.concatenate([dep_arr, mm_arr])
+
+
 @functools.lru_cache(maxsize=None)
 def _workload_schedules(app: FiveGConfig, cfg: TeraPoolConfig):
     """Per-epoch workload-tuned (schedule, placement) pairs for the
@@ -206,12 +225,10 @@ def _workload_schedules(app: FiveGConfig, cfg: TeraPoolConfig):
 
     The STAGE barrier is tuned (jointly with counter placement) on the
     FFT butterfly-stage arrival model; the GLOBAL barrier separately on
-    the epochs it actually closes — the FFT->MATMUL data dependency
-    (zero scatter: the last stage barrier equalized every PE) stacked
-    with the beamforming-row epoch (5% contention scatter) along the
-    trial axis, so its argmin minimizes the summed cost of both
-    episodes rather than assuming one uniform proxy scatter."""
-    from . import tuning, workloads
+    the epochs it actually closes (see :func:`_epoch_arrival_models`),
+    so its argmin minimizes the summed cost of both episodes rather
+    than assuming one uniform proxy scatter."""
+    from . import tuning
     from .placement import STRATEGIES
     from ..runtime import schedule_cache
     n = cfg.n_pes
@@ -221,21 +238,100 @@ def _workload_schedules(app: FiveGConfig, cfg: TeraPoolConfig):
     if hit is not None:
         return (schedule_cache.decode_pair(hit["stage"], cfg)
                 + schedule_cache.decode_pair(hit["global"], cfg))
-    k_stage, k_mm = jax.random.split(jax.random.PRNGKey(_TUNING_SEED))
-    stage_arr = workloads.arrival_batch(k_stage, "fiveg_fft_stage",
-                                        (8, n), cfg=cfg, app=app)
+    stage_arr, global_arr = _epoch_arrival_models(app, cfg)
     stage_sched, stage_plc, _ = tuning.tune_for_arrivals(
         stage_arr, cfg, prune=prune, placements=STRATEGIES)
-    dep_arr = jnp.zeros((4, n), jnp.float32)
-    mm_arr = workloads.arrival_batch(k_mm, "fiveg_matmul_row",
-                                     (4, n), cfg=cfg, app=app)
     global_sched, global_plc, _ = tuning.tune_for_arrivals(
-        jnp.concatenate([dep_arr, mm_arr]), cfg, prune=prune,
-        placements=STRATEGIES)
+        global_arr, cfg, prune=prune, placements=STRATEGIES)
     schedule_cache.store(key, {
         "stage": schedule_cache.encode_pair(stage_sched, stage_plc),
         "global": schedule_cache.encode_pair(global_sched, global_plc)})
     return stage_sched, stage_plc, global_sched, global_plc
+
+
+@functools.lru_cache(maxsize=None)
+def _pareto_schedules(app: FiveGConfig, cfg: TeraPoolConfig):
+    """Energy-aware twin of :func:`_workload_schedules` for the
+    ``sync="pareto"`` mode: same epoch arrival models, same
+    composition x placement space, but each barrier picks the KNEE of
+    its 2-D latency x energy Pareto front
+    (:func:`repro.core.tuning.knee_point`) instead of the pure-cycles
+    argmin — faster than the energy-minimal extreme, cheaper than the
+    best-by-cycles extreme."""
+    from . import tuning
+    from .placement import STRATEGIES
+    from ..runtime import schedule_cache
+    n = cfg.n_pes
+    prune = "none" if n <= 256 else "hierarchy"
+    key = ("fiveg_pareto", repr(app), prune, repr(cfg))
+    hit = schedule_cache.load(key)
+    if hit is not None:
+        return (schedule_cache.decode_pair(hit["stage"], cfg)
+                + schedule_cache.decode_pair(hit["global"], cfg))
+    stage_arr, global_arr = _epoch_arrival_models(app, cfg)
+    stage_sched, stage_plc, _ = tuning.tune_for_arrivals(
+        stage_arr, cfg, prune=prune, placements=STRATEGIES,
+        objective="pareto")
+    global_sched, global_plc, _ = tuning.tune_for_arrivals(
+        global_arr, cfg, prune=prune, placements=STRATEGIES,
+        objective="pareto")
+    schedule_cache.store(key, {
+        "stage": schedule_cache.encode_pair(stage_sched, stage_plc,
+                                            objective="pareto"),
+        "global": schedule_cache.encode_pair(global_sched, global_plc,
+                                             objective="pareto")})
+    return stage_sched, stage_plc, global_sched, global_plc
+
+
+# ---------------------------------------------------------------------------
+# Tuning-server client mode: resolve the workload-conditioned sync
+# modes through a long-lived repro.runtime.serving.TuningServer instead
+# of tuning inline — many app instances (or processes, via the shared
+# schedule cache) then amortize ONE batched sweep dispatch.
+# ---------------------------------------------------------------------------
+
+_TUNING_SERVER = None
+
+
+@contextlib.contextmanager
+def tuning_server(server):
+    """Route ``sync="workload"`` / ``sync="pareto"`` schedule
+    resolution through ``server`` (a
+    :class:`repro.runtime.serving.TuningServer`) while the context is
+    active.  The stage and global barrier requests share one trial
+    count and tuning space, so the server fuses them into a single
+    batched ``sweep_arrivals`` dispatch — and both answers carry full
+    provenance (exact / cache / degraded)."""
+    global _TUNING_SERVER
+    prev = _TUNING_SERVER
+    _TUNING_SERVER = server
+    try:
+        yield server
+    finally:
+        _TUNING_SERVER = prev
+
+
+def _served_schedules(app: FiveGConfig, cfg: TeraPoolConfig,
+                      objective: str):
+    """Resolve the (stage, global) pairs through the installed server.
+    Both requests are submitted before either result is awaited, so
+    they coalesce into one dispatch."""
+    from .placement import STRATEGIES
+    from ..runtime.serving import TuneRequest
+    stage_arr, global_arr = _epoch_arrival_models(app, cfg)
+    placements = tuple(STRATEGIES)
+    t_stage = _TUNING_SERVER.submit(TuneRequest(
+        arrivals=stage_arr, cfg=cfg, objective=objective,
+        placements=placements))
+    t_global = _TUNING_SERVER.submit(TuneRequest(
+        arrivals=global_arr, cfg=cfg, objective=objective,
+        placements=placements))
+    rs, rg = t_stage.result(), t_global.result()
+    for resp in (rs, rg):
+        if not resp.ok:
+            raise RuntimeError(
+                f"tuning server failed the request: {resp.detail}")
+    return rs.schedule, rs.placement, rg.schedule, rg.placement
 
 
 def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
@@ -268,8 +364,20 @@ def _resolve_schedules(app: FiveGConfig, sync: str, radix: int,
         global_sched = stage_sched
         partial_groups = 1
     elif sync == "workload":
-        (stage_sched, stage_plc,
-         global_sched, global_plc) = _workload_schedules(app, cfg)
+        if _TUNING_SERVER is not None:
+            (stage_sched, stage_plc, global_sched,
+             global_plc) = _served_schedules(app, cfg, "cycles")
+        else:
+            (stage_sched, stage_plc,
+             global_sched, global_plc) = _workload_schedules(app, cfg)
+        partial_groups = 1
+    elif sync == "pareto":
+        if _TUNING_SERVER is not None:
+            (stage_sched, stage_plc, global_sched,
+             global_plc) = _served_schedules(app, cfg, "pareto")
+        else:
+            (stage_sched, stage_plc,
+             global_sched, global_plc) = _pareto_schedules(app, cfg)
         partial_groups = 1
     else:
         raise ValueError(f"unknown sync mode {sync!r}")
@@ -355,12 +463,16 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                  energy_model: EnergyModel = DEFAULT_ENERGY) -> FiveGResult:
     """Simulate the full OFDM + beamforming pipeline under one barrier
     strategy.  ``sync`` in {"central", "tree", "partial", "tuned",
-    "tuned_partial", "placed", "workload", "hw"}; ``radix`` is ignored
-    by the tuned, placed, workload and hw modes (the schedule — and for
-    ``placed``/``workload`` the counter->bank mapping too — comes from
-    the mixed-radix tuner; ``workload`` additionally tunes the stage
-    and global barriers SEPARATELY on their own epoch arrival models;
-    ``hw`` runs every barrier on the hardware event unit).
+    "tuned_partial", "placed", "workload", "pareto", "hw"}; ``radix``
+    is ignored by the tuned, placed, workload, pareto and hw modes (the
+    schedule — and for ``placed``/``workload``/``pareto`` the
+    counter->bank mapping too — comes from the mixed-radix tuner;
+    ``workload`` additionally tunes the stage and global barriers
+    SEPARATELY on their own epoch arrival models; ``pareto`` is the
+    energy-aware twin that picks the knee of each barrier's 2-D
+    latency x energy Pareto front; ``hw`` runs every barrier on the
+    hardware event unit).  Inside a :func:`tuning_server` context the
+    workload/pareto schedules resolve through the serving daemon.
     ``core`` selects the simulator implementation for every barrier of
     every mode (telescope default; see :mod:`repro.core.barrier_sim`);
     ``energy_model`` prices the energy columns

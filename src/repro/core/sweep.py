@@ -477,6 +477,23 @@ def sweep_arrivals(arrivals: jnp.ndarray,
                               placements=placements, **res._asdict())
 
 
+def split_kernels(res: ArrivalSweepResult) -> list:
+    """Decompose a batched arrival sweep into per-kernel single-column
+    :class:`ArrivalSweepResult` views (no copy beyond the slice).
+
+    This is the provenance hook of the serving daemon
+    (:mod:`repro.runtime.serving`): because the kernel axis is a plain
+    vmap batch dimension, slicing column ``j`` out of a batched grid is
+    bit-for-bit the result an unbatched single-kernel
+    :func:`sweep_arrivals` call would return for the same trace — the
+    batching acceptance bar of tests/test_serving.py."""
+    return [ArrivalSweepResult(
+        schedules=res.schedules, kernels=(k,), placements=res.placements,
+        **{f: getattr(res, f)[:, j:j + 1]
+           for f in BarrierResult._fields})
+        for j, k in enumerate(res.kernels)]
+
+
 @partial(jax.jit, static_argnums=(2, 3, 4))
 def _schedule_stack(tables: LevelTable, arrivals: jnp.ndarray,
                     cfg: TeraPoolConfig, core: str,

@@ -416,6 +416,68 @@ def pareto_front(res, column: int = 0) -> List[ParetoPoint]:
     return sorted(front, key=lambda p: (p.mean_span, p.mean_energy))
 
 
+def knee_point(front: Sequence[ParetoPoint]) -> ParetoPoint:
+    """The knee of a 2-D latency x energy front: the point closest (in
+    min-max-normalized Euclidean distance) to the utopia corner
+    ``(span_min, energy_min)``.  This is the balanced pick the 5G
+    ``sync="pareto"`` mode and ``objective="pareto"`` serving requests
+    use — faster than the energy-minimal end, cheaper than the
+    best-by-cycles end, deterministic for a given front."""
+    if not front:
+        raise ValueError("empty Pareto front")
+    if len(front) == 1:
+        return front[0]
+    sp = np.array([p.mean_span for p in front], np.float64)
+    en = np.array([p.mean_energy for p in front], np.float64)
+    ns = (sp - sp.min()) / ((sp.max() - sp.min()) or 1.0)
+    ne = (en - en.min()) / ((en.max() - en.min()) or 1.0)
+    return front[int(np.argmin(np.hypot(ns, ne)))]
+
+
+class TunedColumn(NamedTuple):
+    """Per-kernel-column winner of a batched arrival sweep under one
+    request's objective — the unit the serving daemon hands back."""
+
+    schedule: BarrierSchedule
+    placement: object             # CounterPlacement | None
+    name: str
+    mean_span: float
+    mean_energy: float
+
+
+def best_for_arrival_stack(res, objectives) -> List[TunedColumn]:
+    """Decompose one batched ``sweep_arrivals`` grid into per-kernel
+    winners, each column selected under ITS OWN objective (``"cycles"``,
+    ``"energy"``, ``"edp"``, or ``"pareto"`` = knee of the 2-D front).
+
+    This is the batch-composition hook of
+    :class:`repro.runtime.serving.TuningServer`: requests with different
+    objectives share a single compile/dispatch and are split here.
+    ``objectives`` is one string (applied to every column) or a sequence
+    with one entry per kernel column."""
+    n_cols = len(res.kernels)
+    if isinstance(objectives, str):
+        objectives = (objectives,) * n_cols
+    if len(objectives) != n_cols:
+        raise ValueError(
+            f"{len(objectives)} objectives for {n_cols} kernel columns")
+    sp = np.asarray(jnp.mean(res.span_cycles, axis=-1))
+    en = np.asarray(jnp.mean(res.energy, axis=-1))
+    placs = res.placements or (None,) * len(res.schedules)
+    names = res.names
+    out = []
+    for j, obj in enumerate(objectives):
+        if obj == "pareto":
+            p = knee_point(pareto_front(res, column=j))
+            out.append(TunedColumn(p.schedule, p.placement, p.name,
+                                   p.mean_span, p.mean_energy))
+            continue
+        i = int(np.argmin(np.asarray(_objective_grid(res, obj))[:, j]))
+        out.append(TunedColumn(res.schedules[i], placs[i], names[i],
+                               float(sp[i, j]), float(en[i, j])))
+    return out
+
+
 def best_schedule(key, n_pes: int | None = None, delay: float = 0.0,
                   n_trials: int = 16, cfg: TeraPoolConfig = DEFAULT, *,
                   prune: str = "none", partial: bool = False,
@@ -552,13 +614,20 @@ def tune_for_arrivals(arrivals, cfg: TeraPoolConfig = DEFAULT, *,
                       prune: str = "none", partial: bool = False,
                       schedules: Sequence[BarrierSchedule] | None = None,
                       placements: Sequence[str] | None = None,
-                      core: str | None = None
+                      core: str | None = None,
+                      objective: str = "cycles"
                       ) -> Tuple[BarrierSchedule, CounterPlacement | None,
                                  float]:
     """The winning (schedule, placement, mean_span) for an EXPLICIT
     arrival matrix ``(n_trials, N)`` — e.g. a trace of one 5G epoch, or
     a mixture of epochs stacked along the trial axis.  The 5G
-    ``sync="workload"`` mode tunes each of its barriers through this."""
+    ``sync="workload"`` mode tunes each of its barriers through this.
+
+    ``objective`` selects the winner: ``"cycles"`` (legacy argmin by
+    mean span), ``"energy"``, ``"edp"``, or ``"pareto"`` (knee of the
+    2-D latency x energy front).  The returned float is always the
+    winner's mean span so callers can report the latency cost of a
+    non-cycles pick."""
     arrivals = jnp.asarray(arrivals, jnp.float32)
     if arrivals.ndim == 1:
         arrivals = arrivals[None]
@@ -572,10 +641,8 @@ def tune_for_arrivals(arrivals, cfg: TeraPoolConfig = DEFAULT, *,
     scheds, placs = _cross_placements(schedules, placements, cfg)
     res = sweep.sweep_arrivals(arrivals, scheds, cfg, placements=placs,
                                core=core)
-    spans = jnp.mean(res.span_cycles, axis=-1)[:, 0]
-    i = int(jnp.argmin(spans))
-    plc = res.placements[i] if res.placements else None
-    return res.schedules[i], plc, float(spans[i])
+    win = best_for_arrival_stack(res, (objective,))[0]
+    return win.schedule, win.placement, win.mean_span
 
 
 # Fixed seed for the workload tuner's arrival draws: tuning is part of

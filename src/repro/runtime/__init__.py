@@ -2,9 +2,10 @@
 (:mod:`~repro.runtime.fault`), elastic re-meshing
 (:mod:`~repro.runtime.elastic`), deterministic fault injection
 (:mod:`~repro.runtime.inject`), the persistent schedule cache
-(:mod:`~repro.runtime.schedule_cache`) and the resilient sweep server
-(:mod:`~repro.runtime.resilient_sweep`)."""
-from . import elastic, inject, schedule_cache
+(:mod:`~repro.runtime.schedule_cache`), the resilient sweep server
+(:mod:`~repro.runtime.resilient_sweep`) and the request-serving
+daemon (:mod:`~repro.runtime.serving`)."""
+from . import elastic, inject, schedule_cache, serving
 from .fault import (FaultConfig, FaultTolerantRunner, StepStats,
                     StragglerAbort, backoff_delay, supervise)
 from .inject import (DeviceLoss, FaultPlan, Preemption, SimulatedFault,
@@ -14,11 +15,17 @@ from .resilient_sweep import (ResilienceConfig, SweepReport,
                               resilient_sweep_schedules,
                               resilient_sweep_workloads,
                               resilient_tune_barrier)
+from .serving import (ServerClosed, ServerConfig, ServerOverloaded,
+                      ServerStats, TuneRequest, TuneResponse,
+                      TuningServer)
 
 __all__ = ["DeviceLoss", "FaultConfig", "FaultPlan",
            "FaultTolerantRunner", "Preemption", "ResilienceConfig",
-           "SimulatedFault", "SimulatedOOM", "StepStats",
-           "StragglerAbort", "SweepReport", "backoff_delay", "elastic",
+           "ServerClosed", "ServerConfig", "ServerOverloaded",
+           "ServerStats", "SimulatedFault", "SimulatedOOM", "StepStats",
+           "StragglerAbort", "SweepReport", "TuneRequest",
+           "TuneResponse", "TuningServer", "backoff_delay", "elastic",
            "inject", "resilient_sweep_arrivals",
            "resilient_sweep_schedules", "resilient_sweep_workloads",
-           "resilient_tune_barrier", "schedule_cache", "supervise"]
+           "resilient_tune_barrier", "schedule_cache", "serving",
+           "supervise"]

@@ -61,7 +61,7 @@ import shutil
 import statistics
 import time
 from pathlib import Path
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -129,9 +129,11 @@ class SweepReport:
     chunks_computed: int = 0       # executed (and checkpointed) now
     restarts: int = 0              # in-process supervisor restarts
     faults: List[str] = dataclasses.field(default_factory=list)
+    fault_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     device_history: List[int] = dataclasses.field(default_factory=list)
     wall_seconds: float = 0.0
     ckpt_seconds: float = 0.0      # time inside checkpoint save/restore
+    backoff_seconds: float = 0.0   # total supervisor backoff slept
 
 
 def _run_digest(parts: Sequence) -> str:
@@ -306,6 +308,9 @@ class _ChunkedGrid:
 
     def _on_fault(self, exc: Exception) -> None:
         self.report.faults.append(str(exc))
+        cls = type(exc).__name__
+        self.report.fault_counts[cls] = (
+            self.report.fault_counts.get(cls, 0) + 1)
         if self.report.restarts >= self.rcfg.max_restarts:
             raise RuntimeError(
                 f"giving up after {self.rcfg.max_restarts} restarts "
@@ -320,10 +325,12 @@ class _ChunkedGrid:
                     f">= {self.rcfg.min_devices}") from exc
             self.devices = mesh
             self.report.device_history.append(len(mesh))
-        self.sleep(backoff_delay(self.report.restarts,
-                                 base=self.rcfg.backoff_base,
-                                 cap=self.rcfg.backoff_cap,
-                                 jitter=self.rcfg.backoff_jitter))
+        delay = backoff_delay(self.report.restarts,
+                              base=self.rcfg.backoff_base,
+                              cap=self.rcfg.backoff_cap,
+                              jitter=self.rcfg.backoff_jitter)
+        self.report.backoff_seconds += delay
+        self.sleep(delay)
         self.report.restarts += 1
         self._durations.clear()       # fresh watchdog baseline
 

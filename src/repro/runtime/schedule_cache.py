@@ -54,8 +54,12 @@ TTL_ENV = "REPRO_SCHEDULE_CACHE_TTL"
 MAX_ENV = "REPRO_SCHEDULE_CACHE_MAX"
 
 # Process-level cache traffic counters (reset with ``reset_stats``).
+# ``races`` counts tolerated ``FileNotFoundError`` windows — an entry
+# (or the whole cache root) vanishing between our check and our use,
+# e.g. a concurrent ``evict`` in another process.  A race is a benign
+# miss, never a corruption and never a crash.
 STATS = {"hits": 0, "misses": 0, "corrupt": 0, "stores": 0,
-         "evictions": 0}
+         "evictions": 0, "races": 0}
 
 
 def reset_stats() -> None:
@@ -90,6 +94,8 @@ def _expired(path: Path, now: float) -> bool:
         return False
     try:
         return now - path.stat().st_mtime > ttl
+    except FileNotFoundError:
+        raise                        # vanished concurrently: caller's race
     except OSError:
         return True
 
@@ -107,7 +113,12 @@ def evict(now: Optional[float] = None) -> int:
     entries = []
     dropped = 0
     for path in root.glob("*.json"):
-        if _expired(path, now):
+        try:
+            expired = _expired(path, now)
+        except FileNotFoundError:
+            STATS["races"] += 1      # another process beat us to it
+            continue
+        if expired:
             try:
                 path.unlink()
                 dropped += 1
@@ -172,7 +183,16 @@ def load(key: tuple) -> Optional[dict]:
     if not path.exists():
         STATS["misses"] += 1
         return None
-    if _expired(path, time.time()):
+    try:
+        expired = _expired(path, time.time())
+    except FileNotFoundError:
+        # Evicted/unlinked between the exists() check and the stat():
+        # a plain miss, not a corruption (concurrent-writer bar of
+        # tests/test_resilience.py).
+        STATS["races"] += 1
+        STATS["misses"] += 1
+        return None
+    if expired:
         try:
             path.unlink()
         except OSError:
@@ -187,6 +207,10 @@ def load(key: tuple) -> Optional[dict]:
             raise ValueError("payload checksum mismatch")
         if entry["key"] != _key_repr(key):
             raise ValueError("key mismatch (digest collision?)")
+    except FileNotFoundError:
+        STATS["races"] += 1          # vanished between stat and read
+        STATS["misses"] += 1
+        return None
     except (OSError, json.JSONDecodeError, KeyError, TypeError,
             ValueError, UnicodeDecodeError):
         STATS["corrupt"] += 1
@@ -205,27 +229,46 @@ def load(key: tuple) -> Optional[dict]:
 
 def store(key: tuple, payload: dict) -> None:
     """Atomically publish ``payload`` under ``key`` (no-op when the
-    cache is disabled)."""
+    cache is disabled).
+
+    Tolerates the cache root vanishing mid-publish (a concurrent
+    teardown or operator ``rm -rf``): the publish is retried once after
+    re-creating the root, then given up silently — a lost cache entry
+    must never take the tuner down."""
     root = cache_dir()
     if root is None:
         return
-    root.mkdir(parents=True, exist_ok=True)
     entry = {"key": _key_repr(key),
              "sha256": _payload_checksum(payload),
              "payload": payload}
-    fd, tmp = tempfile.mkstemp(dir=root, suffix=".tmp")
-    try:
-        with os.fdopen(fd, "w") as f:
-            f.write(json.dumps(entry, indent=1))
-        os.replace(tmp, _entry_path(root, key))
-    except BaseException:
+    blob = json.dumps(entry, indent=1)
+    for attempt in range(2):
+        root.mkdir(parents=True, exist_ok=True)
         try:
-            os.unlink(tmp)
-        except OSError:
-            pass
-        raise
-    STATS["stores"] += 1
-    evict()
+            fd, tmp = tempfile.mkstemp(dir=root, suffix=".tmp")
+        except FileNotFoundError:
+            STATS["races"] += 1
+            continue
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(blob)
+            os.replace(tmp, _entry_path(root, key))
+        except FileNotFoundError:
+            STATS["races"] += 1
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            continue
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        STATS["stores"] += 1
+        evict()
+        return
 
 
 # ---------------------------------------------------------------------------

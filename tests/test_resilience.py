@@ -570,3 +570,224 @@ def test_schedule_cache_evict_direct_and_unbounded(bounded_cache):
     finally:
         del os.environ[schedule_cache.MAX_ENV]
     assert len(list(bounded_cache.glob("*.json"))) == 2
+
+# ---------------------------------------------------------------------------
+# SweepReport fault ledger: per-class counts + total backoff charged.
+# ---------------------------------------------------------------------------
+
+def test_report_ledger_counts_faults_by_class(tmp_path):
+    scheds = tuning.all_schedules(64)[:8]
+    sleeps = []
+    rc = _rcfg(tmp_path, trial_chunk=1, backoff_base=0.25,
+               backoff_cap=1.0, straggler_factor=5.0,
+               straggler_floor=0.0)
+    # trial_chunk=1 -> 8 chunks: the OOM restart at chunk 1 clears the
+    # watchdog baseline, chunks 1-4 rebuild it, the straggler at chunk
+    # 5 trips it
+    plan = FaultPlan(faults={1: SimulatedOOM()}, straggle={5: 3600.0})
+    rep = resilient_sweep_schedules(KEY, scheds, DELAYS, N_TRIALS,
+                                    resilience=rc, fault_plan=plan,
+                                    sleep=sleeps.append)
+    assert rep.fault_counts == {"SimulatedOOM": 1, "StragglerAbort": 1}
+    assert sum(rep.fault_counts.values()) == len(rep.faults) == 2
+    # every second the supervisor slept in backoff is on the ledger
+    assert rep.backoff_seconds == pytest.approx(sum(sleeps))
+    assert rep.backoff_seconds > 0
+
+
+def test_report_ledger_empty_on_clean_run(tmp_path):
+    scheds = tuning.all_schedules(64)[:4]
+    rep = resilient_sweep_schedules(KEY, scheds, DELAYS, 4,
+                                    resilience=_rcfg(tmp_path),
+                                    sleep=_nosleep)
+    assert rep.fault_counts == {} and rep.backoff_seconds == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Preemption end-to-end: the process DIES mid-sweep; a fresh process
+# resumes from the chunk store and lands bit-for-bit on the plain run.
+# ---------------------------------------------------------------------------
+
+_PREEMPT_SCRIPT = """
+import os
+import jax
+import numpy as np
+from repro.core import sweep, tuning
+from repro.runtime import (FaultPlan, Preemption, ResilienceConfig,
+                           SimulatedFault, resilient_sweep_arrivals)
+
+tmp = os.environ["RESILIENCE_TMP"]
+phase = os.environ["RESILIENCE_PHASE"]
+key = jax.random.PRNGKey(0)
+scheds = tuning.all_schedules(64)
+arr = np.asarray(300.0 * jax.random.uniform(key, (2, 6, 64)), np.float32)
+rc = ResilienceConfig(ckpt_dir=tmp + "/chunks", trial_chunk=2,
+                      backoff_base=0.0, backoff_cap=0.0)
+if phase == "A":
+    plan = FaultPlan(faults={1: Preemption()})
+    try:
+        resilient_sweep_arrivals(arr, scheds, kernels=("a", "b"),
+                                 resilience=rc, fault_plan=plan,
+                                 sleep=lambda s: None)
+    except SimulatedFault:
+        print("preempted after chunk 0")
+        raise SystemExit(17)          # the process dies; the store survives
+    raise SystemExit("preemption never fired")
+rep = resilient_sweep_arrivals(arr, scheds, kernels=("a", "b"),
+                               resilience=rc, sleep=lambda s: None)
+base = sweep.sweep_arrivals(arr, scheds, kernels=("a", "b"))
+np.testing.assert_array_equal(np.asarray(rep.result.span_cycles),
+                              np.asarray(base.span_cycles))
+np.testing.assert_array_equal(np.asarray(rep.result.exit_time),
+                              np.asarray(base.exit_time))
+np.testing.assert_array_equal(np.asarray(rep.result.energy),
+                              np.asarray(base.energy))
+assert rep.chunks_resumed == 1 and rep.chunks_computed == 2, rep
+print("cross-process resume ok")
+"""
+
+
+def test_preemption_cross_process_resume(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["RESILIENCE_TMP"] = str(tmp_path)
+    env["RESILIENCE_PHASE"] = "A"
+    a = subprocess.run([sys.executable, "-c", _PREEMPT_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert a.returncode == 17, a.stdout[-3000:] + a.stderr[-3000:]
+    assert "preempted after chunk 0" in a.stdout
+    assert (tmp_path / "chunks").is_dir()   # the store outlived process A
+    env["RESILIENCE_PHASE"] = "B"
+    b = subprocess.run([sys.executable, "-c", _PREEMPT_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert b.returncode == 0, b.stdout[-3000:] + b.stderr[-3000:]
+    assert "cross-process resume ok" in b.stdout
+
+
+# ---------------------------------------------------------------------------
+# Concurrent cache writers: stress + deterministic vanishing-file races.
+# ---------------------------------------------------------------------------
+
+_STRESS_SCRIPT = """
+import os
+from repro.runtime import schedule_cache
+
+wid = int(os.environ["STRESS_WORKER"])
+for i in range(40):
+    k = ("stress", (wid + i) % 6)
+    schedule_cache.store(k, {"worker": wid, "iter": i})
+    schedule_cache.load(k)
+    schedule_cache.load(("stress", (wid + i + 1) % 6))
+# torn or truncated entries would land in the corrupt counter: a race
+# must read as a benign miss, never as corruption
+assert schedule_cache.STATS["corrupt"] == 0, schedule_cache.STATS
+print("worker", wid, "ok")
+"""
+
+
+def test_schedule_cache_multiprocess_stress(cache_env, monkeypatch):
+    """Four writer processes hammer six overlapping keys while the cap
+    forces evictions on every store AND the parent concurrently runs
+    the evictor: nobody ever reads a torn entry."""
+    monkeypatch.setenv(schedule_cache.MAX_ENV, "3")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    procs = []
+    for wid in range(4):
+        env_w = dict(env)
+        env_w["STRESS_WORKER"] = str(wid)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", _STRESS_SCRIPT], env=env_w,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+    deadline = time.time() + 600
+    while any(p.poll() is None for p in procs) and time.time() < deadline:
+        schedule_cache.evict()       # adversarial concurrent evictor
+        time.sleep(0.01)
+    for wid, p in enumerate(procs):
+        out, err = p.communicate(timeout=60)
+        assert p.returncode == 0, f"worker {wid}:\n{out[-2000:]}{err[-2000:]}"
+        assert f"worker {wid} ok" in out
+    # the parent's own stats saw no corruption either
+    assert schedule_cache.STATS["corrupt"] == 0
+
+
+def test_schedule_cache_load_tolerates_vanishing_entry(cache_env,
+                                                       monkeypatch):
+    schedule_cache.store(("race-load",), {"v": 1})
+    real = Path.read_text
+    armed = {"on": True}
+
+    def vanish(self, *a, **kw):
+        if armed["on"] and self.parent == cache_env:
+            armed["on"] = False          # one-shot: entry "vanishes" once
+            raise FileNotFoundError(str(self))
+        return real(self, *a, **kw)
+
+    monkeypatch.setattr(Path, "read_text", vanish)
+    assert schedule_cache.load(("race-load",)) is None
+    assert schedule_cache.STATS["races"] == 1
+    assert schedule_cache.STATS["corrupt"] == 0
+    # the entry itself was never unlinked: the next read hits
+    assert schedule_cache.load(("race-load",)) == {"v": 1}
+
+
+def test_schedule_cache_load_tolerates_vanishing_stat(cache_env,
+                                                      monkeypatch):
+    monkeypatch.setenv(schedule_cache.TTL_ENV, "3600")
+    schedule_cache.store(("race-stat",), {"v": 2})
+    real = schedule_cache._expired
+    armed = {"on": True}
+
+    def vanish(path, now):
+        if armed["on"]:
+            armed["on"] = False
+            raise FileNotFoundError(str(path))
+        return real(path, now)
+
+    monkeypatch.setattr(schedule_cache, "_expired", vanish)
+    assert schedule_cache.load(("race-stat",)) is None
+    assert schedule_cache.STATS["races"] >= 1
+    assert schedule_cache.STATS["corrupt"] == 0
+    assert schedule_cache.load(("race-stat",)) == {"v": 2}
+
+
+def test_schedule_cache_store_tolerates_vanishing_root(cache_env,
+                                                       monkeypatch):
+    real = os.replace
+    armed = {"left": 2}
+
+    def vanish(src, dst):
+        if armed["left"] > 0:
+            armed["left"] -= 1
+            raise FileNotFoundError(dst)
+        return real(src, dst)
+
+    monkeypatch.setattr(schedule_cache.os, "replace", vanish)
+    schedule_cache.store(("race-store",), {"v": 3})   # gives up silently
+    assert schedule_cache.STATS["races"] == 2         # both attempts raced
+    assert schedule_cache.STATS["stores"] == 0
+    assert not list(cache_env.glob("*.tmp"))          # temp files reaped
+    # with the race gone the very next publish lands
+    schedule_cache.store(("race-store",), {"v": 3})
+    assert schedule_cache.load(("race-store",)) == {"v": 3}
+
+
+def test_schedule_cache_evict_tolerates_vanishing_entry(cache_env,
+                                                        monkeypatch):
+    monkeypatch.setenv(schedule_cache.TTL_ENV, "3600")
+    schedule_cache.store(("race-evict", 1), {"v": 1})
+    schedule_cache.store(("race-evict", 2), {"v": 2})
+
+    calls = {"n": 0}
+    real = schedule_cache._expired
+
+    def vanish_first(path, now):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise FileNotFoundError(str(path))
+        return real(path, now)
+
+    monkeypatch.setattr(schedule_cache, "_expired", vanish_first)
+    assert schedule_cache.evict() == 0    # skips the racer, keeps going
+    assert calls["n"] == 2                # still visited the second entry
+    assert schedule_cache.STATS["races"] == 1
