@@ -13,9 +13,9 @@ import sys
 
 
 def _modules():
-    from . import (bench_core, bench_energy, bench_multicluster,
-                   bench_resilience, bench_serving, collectives_bench,
-                   fig4_random_delay, fig5_kernel_cdf,
+    from . import (bench_core, bench_energy, bench_faults,
+                   bench_multicluster, bench_resilience, bench_serving,
+                   collectives_bench, fig4_random_delay, fig5_kernel_cdf,
                    fig6_kernel_colormap, fig7_5g_app, fig_placement,
                    fig_tuned_tree, fig_workload_tuned, roofline_table)
     return [("fig4", fig4_random_delay), ("fig5", fig5_kernel_cdf),
@@ -28,6 +28,7 @@ def _modules():
             ("energy", bench_energy),
             ("collectives", collectives_bench),
             ("resilience", bench_resilience),
+            ("faults", bench_faults),
             ("serving", bench_serving),
             ("roofline", roofline_table)]
 

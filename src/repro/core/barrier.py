@@ -419,6 +419,83 @@ def validate_tail_padding(table: LevelTable, *,
     return table
 
 
+# ---------------------------------------------------------------------------
+# Degradation-tolerant release semantics: timeout and quorum barriers.
+# ---------------------------------------------------------------------------
+
+class FaultSpec(NamedTuple):
+    """Release semantics of a degradation-tolerant barrier, as traced
+    data (a JAX pytree of scalars/rows — new thresholds never
+    recompile anything).
+
+    Every counter of every level releases at
+
+        ``release = min(quorum_done, first_arrival + timeout_cycles)``
+
+    * **quorum**: a counter over ``g`` children releases once
+      ``ceil(quorum_frac * g)`` of them have been serviced (K-of-N
+      release; ``quorum_frac == 1.0`` is the classical all-arrive
+      barrier).
+    * **timeout**: a watchdog armed when the counter services its FIRST
+      child forces release ``timeout_cycles`` later even if the quorum
+      never fills — the hardware-synchronizer bound of Glaser et al.
+      (arXiv 2004.06662) against a stalled or dead child deadlocking
+      the whole tree.  ``+inf`` disables it.
+
+    Children still missing at release are *abandoned*: the subtree the
+    barrier gave up on is charged to ``abandoned_pes`` and its late
+    arrival can no longer block any ancestor.  With ``timeout = +inf``
+    and ``quorum_frac = 1.0`` the semantics — and, in the simulator,
+    the float32 results bit for bit — degenerate to the classical
+    barrier.
+
+    ``timeout_cycles`` is a scalar (every level shares the budget) or a
+    per-level row aligned with the PADDED level index of the table it
+    runs against.  ``e_timeout_poll`` / ``e_abandon`` carry the
+    degradation energy surcharges (:func:`repro.core.energy.
+    robust_episode_energy`) so the energy column stays pure table+spec
+    data.
+    """
+
+    timeout_cycles: jnp.ndarray   # () or (L,) float32, +inf = never
+    quorum_frac: jnp.ndarray      # () float32 in (0, 1]
+    e_timeout_poll: jnp.ndarray   # () float32 pJ / watchdog release
+    e_abandon: jnp.ndarray        # () float32 pJ / abandoned PE
+
+
+def fault_spec(timeout_cycles=jnp.inf, quorum_frac=1.0,
+               energy_model: EnergyModel = DEFAULT_ENERGY) -> FaultSpec:
+    """Build a :class:`FaultSpec`, validating concrete (untraced)
+    thresholds: timeouts must be ``>= 0`` and the quorum fraction in
+    ``(0, 1]``."""
+    t = jnp.asarray(timeout_cycles, jnp.float32)
+    q = jnp.asarray(quorum_frac, jnp.float32)
+    if t.ndim > 1:
+        raise ValueError(
+            f"timeout_cycles must be a scalar or a per-level row, got "
+            f"shape {t.shape}")
+    if not isinstance(t, jax.core.Tracer) and bool(jnp.any(t < 0)):
+        raise ValueError(f"timeout_cycles must be >= 0, got {t}")
+    if not isinstance(q, jax.core.Tracer) and not bool(
+            jnp.all((q > 0) & (q <= 1))):
+        raise ValueError(f"quorum_frac must be in (0, 1], got {q}")
+    return FaultSpec(t, q,
+                     jnp.float32(energy_model.e_timeout_poll),
+                     jnp.float32(energy_model.e_abandon))
+
+
+# NO_FAULTS (the degenerate spec) is materialized lazily via module
+# __getattr__: building it eagerly would create jax arrays at import
+# time and lock the backend's device count before entry points like
+# repro.launch.dryrun get to set XLA_FLAGS.
+def __getattr__(name: str):
+    if name == "NO_FAULTS":
+        spec = fault_spec()
+        globals()["NO_FAULTS"] = spec
+        return spec
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 def max_depth(n_pes: int) -> int:
     """Depth of the deepest tree over ``n_pes`` cores (radix 2)."""
     return max(1, int(math.log2(n_pes)))

@@ -92,6 +92,12 @@ class EnergyModel:
     p_wfi: float = 0.002       # pJ / cycle, clock-gated in WFI / stalled
     p_poll: float = 0.6        # pJ / cycle, spin-polling the counter
     sleep: str = "wfi"         # "wfi" | "poll"
+    # Degradation-tolerant barriers (timeout/quorum release): a level
+    # that releases by watchdog pays one deadline-check + abandon-mark
+    # round at its counters; every PE the tree gives up on pays the
+    # cleanup cost of invalidating its pending arrival.
+    e_timeout_poll: float = 8.0   # pJ / level released by watchdog
+    e_abandon: float = 25.0       # pJ / abandoned PE (cleanup traffic)
 
     @property
     def idle_power(self) -> float:
@@ -182,6 +188,24 @@ def episode_energy(energy_static, active_cycles, idle_power, n_pes,
     contraction)."""
     return energy_static + idle_power * (
         n_pes * mean_residency - active_cycles)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def robust_episode_energy(energy_static, active_cycles, idle_power, n_pes,
+                          mean_residency, e_timeout_poll, timed_out_levels,
+                          e_abandon, abandoned_pes):
+    """:func:`episode_energy` plus the degradation surcharges: one
+    watchdog-release round per timed-out level, one cleanup round per
+    abandoned PE.  Jitted for the same reason as the base formula — one
+    compiled op order shared by cores and oracles — and built ON TOP of
+    it so a zero-fault episode (``timed_out_levels == 0``,
+    ``abandoned_pes == 0``) reproduces the plain energy column bit for
+    bit (``x + c*0 == x`` in IEEE-754 for the finite, positive energies
+    involved)."""
+    base = episode_energy(energy_static, active_cycles, idle_power,
+                          n_pes, mean_residency)
+    return (base + e_timeout_poll * timed_out_levels
+            + e_abandon * abandoned_pes)
 
 
 # ---------------------------------------------------------------------------

@@ -61,7 +61,7 @@ import jax
 import jax.numpy as jnp
 
 from . import barrier, barrier_sim
-from .barrier import LevelTable
+from .barrier import FaultSpec, LevelTable, fault_spec
 from .barrier_sim import core_fn
 from .energy import DEFAULT_ENERGY, EnergyModel
 from .topology import DEFAULT, TeraPoolConfig
@@ -137,6 +137,32 @@ class FiveGResult(NamedTuple):
     # "@strategy"-suffixed where a tuned counter placement is attached.
     stage_schedule: str = ""
     global_schedule: str = ""
+    # Degradation columns (``faults=`` runs; trivial otherwise): the
+    # mean fraction of PEs released per barrier episode, and the total
+    # watchdog (timeout) releases across the whole pipeline.
+    completion_rate: jnp.ndarray | float = 1.0
+    timed_out_levels: jnp.ndarray | float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FiveGFaults:
+    """PE-failure mode of the 5G app: a persistent fail-stop mask drawn
+    once per run (``fail_rate`` Bernoulli per PE under ``seed``) plus
+    the timeout/quorum release policy every barrier then runs with.
+    Failed PEs never reach another barrier — surviving PEs release via
+    the ``timeout_cycles`` watchdog (or a ``quorum_frac`` < 1 early
+    quorum) instead of hanging, and the app's throughput degrades
+    instead of deadlocking."""
+
+    fail_rate: float = 0.0
+    timeout_cycles: float = 2000.0
+    quorum_frac: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= float(self.fail_rate) < 1.0:
+            raise ValueError(
+                f"fail_rate must be in [0, 1), got {self.fail_rate}")
 
 
 def _epoch_arrivals(key: jax.Array, start: jnp.ndarray, work: float,
@@ -447,6 +473,78 @@ def _app_core(key: jax.Array, stage_table: LevelTable,
             energy_acc + res.energy)
 
 
+@partial(jax.jit,
+         static_argnames=("n_epochs", "partial_groups", "n_pes", "cfg",
+                          "core"))
+def _app_core_robust(key: jax.Array, stage_table: LevelTable,
+                     global_table: LevelTable, epoch_work: jnp.ndarray,
+                     jitter: jnp.ndarray, mm_work: jnp.ndarray,
+                     mm_jitter: jnp.ndarray, mask: jnp.ndarray,
+                     spec: FaultSpec, *, n_epochs: int,
+                     partial_groups: int, n_pes: int,
+                     cfg: TeraPoolConfig, core: str):
+    """Degradation-tolerant twin of :func:`_app_core`: every barrier
+    runs the timeout/quorum robust core, and the persistent fail-stop
+    ``mask`` turns its PEs' arrivals into ``+inf`` at EVERY barrier
+    entry (failed PEs stay failed across epochs).  Returns the extra
+    (abandoned-PE, timed-out-level) totals alongside the plain
+    accumulators; mask and spec are traced data, so sweeping the
+    failure rate or the release policy reuses one compiled program."""
+    sim = core_fn(core, robust=True)
+    keys = jax.random.split(key, n_epochs + 2)
+    fft_pes = n_pes // partial_groups
+
+    def epoch(carry, k):
+        t, acc, acc_e, acc_ab, acc_t = carry
+        arr = _epoch_arrivals(k, t, epoch_work, jitter, n_pes)
+        arr = jnp.where(mask, jnp.inf, arr)
+        if partial_groups > 1:
+            grp = arr.reshape(partial_groups, fft_pes)
+            res = jax.vmap(
+                lambda a: sim(a, stage_table, cfg, None, spec))(grp)
+            t = jnp.repeat(res.exit_time, fft_pes)
+            acc = acc + jnp.mean(res.mean_residency)
+            acc_e = acc_e + jnp.sum(res.energy)
+            acc_ab = acc_ab + jnp.sum(res.abandoned_pes)
+            acc_t = acc_t + jnp.sum(res.timed_out_levels)
+        else:
+            res = sim(arr, stage_table, cfg, None, spec)
+            t = jnp.full((n_pes,), res.exit_time)
+            acc = acc + res.mean_residency
+            acc_e = acc_e + res.energy
+            acc_ab = acc_ab + res.abandoned_pes
+            acc_t = acc_t + res.timed_out_levels
+        return (t, acc, acc_e, acc_ab, acc_t), None
+
+    t = jnp.zeros((n_pes,), jnp.float32)   # per-PE current time
+    sync_acc = jnp.asarray(0.0)            # accumulated mean barrier cycles
+    energy_acc = jnp.asarray(0.0)          # accumulated barrier energy (pJ)
+    ab_acc = jnp.asarray(0, jnp.int32)     # abandoned PEs, all episodes
+    t_acc = jnp.asarray(0, jnp.int32)      # watchdog releases
+    (t, sync_acc, energy_acc, ab_acc, t_acc), _ = jax.lax.scan(
+        epoch, (t, sync_acc, energy_acc, ab_acc, t_acc), keys[:n_epochs])
+
+    # FFT -> beamforming data dependency: one global barrier (failed
+    # PEs never reach it either).
+    res = sim(jnp.where(mask, jnp.inf, t), global_table, cfg, None, spec)
+    t = jnp.full((n_pes,), res.exit_time)
+    sync_acc = sync_acc + res.mean_residency
+    energy_acc = energy_acc + res.energy
+    ab_acc = ab_acc + res.abandoned_pes
+    t_acc = t_acc + res.timed_out_levels
+
+    # Beamforming MATMUL barrier (see _app_core).
+    arr = _epoch_arrivals(keys[n_epochs], t, mm_work, mm_jitter, n_pes)
+    arr = jnp.where(mask, jnp.inf, arr)
+    res = sim(arr, global_table, cfg, None, spec)
+    n_episodes = jnp.float32(n_epochs + 2)
+    completion = 1.0 - ((ab_acc + res.abandoned_pes).astype(jnp.float32)
+                        / (n_episodes * jnp.float32(n_pes)))
+    return (res.exit_time, sync_acc + res.mean_residency,
+            energy_acc + res.energy, completion,
+            (t_acc + res.timed_out_levels).astype(jnp.float32))
+
+
 def _compute_energy(app: FiveGConfig, n: int, n_epochs: int,
                     model: EnergyModel) -> jnp.ndarray:
     """Instruction energy of the application's COMPUTE cycles (pJ): the
@@ -460,7 +558,8 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
                  sync: str = "partial", radix: int = 32,
                  cfg: TeraPoolConfig = DEFAULT, *,
                  core: str | None = None,
-                 energy_model: EnergyModel = DEFAULT_ENERGY) -> FiveGResult:
+                 energy_model: EnergyModel = DEFAULT_ENERGY,
+                 faults: FiveGFaults | None = None) -> FiveGResult:
     """Simulate the full OFDM + beamforming pipeline under one barrier
     strategy.  ``sync`` in {"central", "tree", "partial", "tuned",
     "tuned_partial", "placed", "workload", "pareto", "hw"}; ``radix``
@@ -477,6 +576,13 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     every mode (telescope default; see :mod:`repro.core.barrier_sim`);
     ``energy_model`` prices the energy columns
     (:mod:`repro.core.energy`).
+
+    ``faults`` (a :class:`FiveGFaults`) runs the whole pipeline under
+    persistent PE fail-stops with timeout/quorum barrier release: the
+    result's ``completion_rate`` / ``timed_out_levels`` columns report
+    the degradation, and ``total_cycles`` stays finite as long as the
+    release policy is non-trivial.  ``faults=None`` runs the fault-free
+    plain cores, bit-for-bit the legacy result.
 
     The ~25-epoch pipeline runs as one jitted ``lax.scan``; changing the
     radix — or swapping in any tuned schedule or placement of the same
@@ -497,12 +603,27 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
     jitter = app.epoch_jitter
     n_epochs = app.rounds * app.n_stages
 
-    total, sync_acc, energy_acc = _app_core(
-        key, stage_table, global_table, jnp.float32(epoch_work),
-        jnp.float32(jitter), jnp.float32(app.mm_work(n)),
-        jnp.float32(app.mm_jitter(n)), n_epochs=n_epochs,
-        partial_groups=partial_groups, n_pes=n, cfg=cfg,
-        core=barrier_sim.resolve_core(core))
+    completion = 1.0
+    timed = 0.0
+    if faults is None:
+        total, sync_acc, energy_acc = _app_core(
+            key, stage_table, global_table, jnp.float32(epoch_work),
+            jnp.float32(jitter), jnp.float32(app.mm_work(n)),
+            jnp.float32(app.mm_jitter(n)), n_epochs=n_epochs,
+            partial_groups=partial_groups, n_pes=n, cfg=cfg,
+            core=barrier_sim.resolve_core(core))
+    else:
+        mask = jax.random.bernoulli(jax.random.PRNGKey(faults.seed),
+                                    faults.fail_rate, (n,))
+        spec = fault_spec(timeout_cycles=faults.timeout_cycles,
+                          quorum_frac=faults.quorum_frac,
+                          energy_model=energy_model)
+        total, sync_acc, energy_acc, completion, timed = _app_core_robust(
+            key, stage_table, global_table, jnp.float32(epoch_work),
+            jnp.float32(jitter), jnp.float32(app.mm_work(n)),
+            jnp.float32(app.mm_jitter(n)), mask, spec, n_epochs=n_epochs,
+            partial_groups=partial_groups, n_pes=n, cfg=cfg,
+            core=barrier_sim.resolve_core(core))
 
     # Serial single-core reference (no barriers, same per-PE work model).
     fft_work = app.n_rx * app.n_stages * app.fft_pes * app.stage_cycles
@@ -522,7 +643,42 @@ def simulate_app(key: jax.Array, app: FiveGConfig = FiveGConfig(),
         energy_fraction=energy_acc / total_energy,
         stage_schedule=barrier.schedule_name(stage_sched, stage_plc),
         global_schedule=barrier.schedule_name(global_sched, global_plc),
+        completion_rate=completion,
+        timed_out_levels=timed,
     )
+
+
+def degradation_curve(key: jax.Array,
+                      fail_rates=(0.0, 0.005, 0.01, 0.02, 0.05),
+                      app: FiveGConfig = FiveGConfig(),
+                      modes: tuple = ("central", "tree", "hw"),
+                      radix: int = 32,
+                      cfg: TeraPoolConfig = DEFAULT, *,
+                      core: str | None = None,
+                      timeout_cycles: float = 2000.0,
+                      quorum_frac: float = 1.0,
+                      energy_model: EnergyModel = DEFAULT_ENERGY) -> dict:
+    """5G throughput vs. PE-failure rate, per sync mode: one
+    :class:`FiveGResult` per (mode, fail_rate), all rates of one mode
+    through the SAME compiled robust pipeline (the mask and release
+    spec are traced data).  Returns ``{"fail_rates": tuple, mode:
+    [FiveGResult, ...]}`` with the per-mode list aligned to
+    ``fail_rates`` — the Fig. 7 comparison bent into a degradation
+    curve: how gracefully each barrier strategy sheds throughput as
+    PEs die, under a ``timeout_cycles`` watchdog (and optionally a
+    ``quorum_frac`` < 1 early-release quorum)."""
+    rates = tuple(float(r) for r in fail_rates)
+    out: dict = {"fail_rates": rates}
+    for mode in modes:
+        out[mode] = [
+            simulate_app(key, app, sync=mode, radix=radix, cfg=cfg,
+                         core=core, energy_model=energy_model,
+                         faults=FiveGFaults(fail_rate=r,
+                                            timeout_cycles=timeout_cycles,
+                                            quorum_frac=quorum_frac,
+                                            seed=i))
+            for i, r in enumerate(rates)]
+    return out
 
 
 def simulate_app_reference(key: jax.Array, app: FiveGConfig = FiveGConfig(),

@@ -289,6 +289,7 @@ def simulate_placed_reference(arrivals, schedule: BarrierSchedule,
                      axis=-1).reshape(batch)
     stat, act, idle = schedule_energy_constants(
         schedule, placement, cfg, DEFAULT_ENERGY)
+    zeros = jnp.zeros(batch, jnp.int32)
     return BarrierResult(
         exit_time=jnp.asarray(exit_time),
         last_arrival=jnp.asarray(last),
@@ -296,4 +297,7 @@ def simulate_placed_reference(arrivals, schedule: BarrierSchedule,
         mean_residency=resid,
         energy=episode_energy(jnp.float32(stat), jnp.float32(act),
                               jnp.float32(idle), schedule.n_pes, resid),
+        completed=jnp.isfinite(jnp.asarray(exit_time)),
+        abandoned_pes=zeros,
+        timed_out_levels=zeros,
     )

@@ -93,6 +93,9 @@ class SweepResult(NamedTuple):
     span_cycles: jnp.ndarray      # (S, D, T)
     mean_residency: jnp.ndarray   # (S, D, T)
     energy: jnp.ndarray           # (S, D, T) episode energy, pJ
+    completed: jnp.ndarray        # (S, D, T) bool: barrier released
+    abandoned_pes: jnp.ndarray    # (S, D, T) int32 abandoned PEs
+    timed_out_levels: jnp.ndarray  # (S, D, T) int32 watchdog releases
     placements: tuple = ()        # tuple[CounterPlacement | None], length S
 
     @property
@@ -121,6 +124,14 @@ class SweepResult(NamedTuple):
         """(S, D) episode energy (pJ), averaged over trials."""
         return jnp.mean(self.energy, axis=-1)
 
+    @property
+    def completion_rate(self) -> jnp.ndarray:
+        """(S, D) mean fraction of PEs released per barrier episode
+        (1.0 everywhere on fault-free sweeps)."""
+        n = jnp.float32(self.schedules[0].n_pes)
+        return jnp.mean(1.0 - self.abandoned_pes.astype(jnp.float32) / n,
+                        axis=-1)
+
 
 class ArrivalSweepResult(NamedTuple):
     """Per-point timings over a (schedule[, placement], kernel, trial)
@@ -139,6 +150,9 @@ class ArrivalSweepResult(NamedTuple):
     span_cycles: jnp.ndarray      # (S, K, T)
     mean_residency: jnp.ndarray   # (S, K, T)
     energy: jnp.ndarray           # (S, K, T) episode energy, pJ
+    completed: jnp.ndarray        # (S, K, T) bool: barrier released
+    abandoned_pes: jnp.ndarray    # (S, K, T) int32 abandoned PEs
+    timed_out_levels: jnp.ndarray  # (S, K, T) int32 watchdog releases
     placements: tuple = ()        # tuple[CounterPlacement | None], length S
 
     @property
@@ -161,6 +175,14 @@ class ArrivalSweepResult(NamedTuple):
     def mean_energy(self) -> jnp.ndarray:
         """(S, K) episode energy (pJ) per kernel, averaged over trials."""
         return jnp.mean(self.energy, axis=-1)
+
+    @property
+    def completion_rate(self) -> jnp.ndarray:
+        """(S, K) mean fraction of PEs released per barrier episode
+        (1.0 everywhere on fault-free sweeps)."""
+        n = jnp.float32(self.schedules[0].n_pes)
+        return jnp.mean(1.0 - self.abandoned_pes.astype(jnp.float32) / n,
+                        axis=-1)
 
 
 def radix_tables(radices: Sequence[int], n_pes: int | None = None,
@@ -202,6 +224,33 @@ def _sweep_grid(tables: LevelTable, delays: jnp.ndarray, unit: jnp.ndarray,
                 widths: tuple | None) -> BarrierResult:
     """(R, D, T) grid through one compiled program."""
     return _sweep_body(tables, delays, unit, cfg, core, widths)
+
+
+def _sweep_body_robust(tables: LevelTable, fixed: tuple, unit: jnp.ndarray,
+                       cfg: TeraPoolConfig, core: str,
+                       widths: tuple | None = None) -> BarrierResult:
+    """(R, D, T) grid body under the degradation-tolerant cores.
+
+    ``fixed`` packs ``(delays, fault_spec)`` into the dispatcher's
+    single fixed slot; the spec (timeout rows, quorum fraction) is
+    traced data broadcast across the whole grid, so sweeping it costs
+    zero extra compiles."""
+    delays, faults = fixed
+    fn = core_fn(core, robust=True)
+    arrivals = delays[:, None, None] * unit[None, :, :]      # (D, T, N)
+    per_trial = jax.vmap(lambda tab, a: fn(a, tab, cfg, widths, faults),
+                         in_axes=(None, 0))                  # over T
+    per_delay = jax.vmap(per_trial, in_axes=(None, 0))       # over D
+    per_radix = jax.vmap(per_delay, in_axes=(0, None))       # over R
+    return per_radix(tables, arrivals)
+
+
+@partial(jax.jit, static_argnums=(3, 4, 5), donate_argnums=(2,))
+def _sweep_grid_robust(tables: LevelTable, fixed: tuple, unit: jnp.ndarray,
+                       cfg: TeraPoolConfig, core: str,
+                       widths: tuple | None) -> BarrierResult:
+    """(R, D, T) timeout/quorum grid through one compiled program."""
+    return _sweep_body_robust(tables, fixed, unit, cfg, core, widths)
 
 
 # ---------------------------------------------------------------------------
@@ -304,6 +353,9 @@ def _dispatch_grid(body: str, tables: LevelTable, fixed: jnp.ndarray,
     """
     n_sched = tables.group_sizes.shape[0]
     widths = barrier.telescope_widths(tables, block.shape[-1])
+    if body.endswith("_robust"):
+        shard = False    # robust grids run unsharded (traced FaultSpec
+        #                  in the fixed slot; no shard_map spec for it)
     with barrier_sim.quiet_donation():
         if body == "arrival" and shard:
             devs = (tuple(devices) if devices is not None
@@ -315,7 +367,9 @@ def _dispatch_grid(body: str, tables: LevelTable, fixed: jnp.ndarray,
                 return grid(tables, fixed, block)
         devices = _grid_devices(n_sched, shard, devices)
         if devices is None:
-            grid = {"sweep": _sweep_grid, "arrival": _arrival_grid}[body]
+            grid = {"sweep": _sweep_grid, "arrival": _arrival_grid,
+                    "sweep_robust": _sweep_grid_robust,
+                    "arrival_robust": _arrival_grid_robust}[body]
             return grid(tables, fixed, block, cfg, core, widths)
         return _sharded_grid(devices, body, cfg, core, widths)(
             tables, fixed, block)
@@ -348,7 +402,8 @@ def sweep_schedules(key: jax.Array,
                     core: str | None = None,
                     trial_chunk: int | None = None,
                     shard: bool = True,
-                    devices=None) -> SweepResult:
+                    devices=None,
+                    faults=None) -> SweepResult:
     """Run ANY same-``n_pes`` schedule stack x delay x trial grid in one
     compiled call — uniform radices, mixed-radix compositions and
     counter placements alike flow through the same jitted program.
@@ -361,15 +416,22 @@ def sweep_schedules(key: jax.Array,
     splitting the trial axis (chunked == unchunked bit-for-bit; the
     trial draws happen once, up front); ``shard`` allows splitting the
     schedule axis across visible devices (``devices`` restricts the
-    pool to an explicit tuple, e.g. the survivors of a device loss)."""
+    pool to an explicit tuple, e.g. the survivors of a device loss).
+
+    ``faults`` — a :class:`~repro.core.barrier.FaultSpec` from
+    :func:`~repro.core.barrier.fault_spec` — switches the grid to the
+    degradation-tolerant cores (timeout/quorum release); the spec is
+    traced data, so sweeping specs reuses one compiled robust grid."""
     schedules = tuple(schedules)
     tables = barrier.stack_tables(schedules, cfg, placements)
     n = schedules[0].n_pes
     unit = jax.random.uniform(key, (n_trials, n), jnp.float32, 0.0, 1.0)
     d = jnp.asarray(delays, jnp.float32)
     core = barrier_sim.resolve_core(core)
+    body = "sweep" if faults is None else "sweep_robust"
+    fixed = d if faults is None else (d, faults)
     res = _concat_results([
-        _dispatch_grid("sweep", tables, d, jnp.copy(unit[lo:hi]), cfg,
+        _dispatch_grid(body, tables, fixed, jnp.copy(unit[lo:hi]), cfg,
                        core, shard, devices)
         for lo, hi in _trial_chunks(n_trials, trial_chunk)])
     # Placement-free sweeps keep the documented empty tuple (consumers
@@ -422,6 +484,30 @@ def _arrival_grid(tables: LevelTable, _unused: jnp.ndarray,
     return _arrival_body(tables, _unused, arrivals, cfg, core, widths)
 
 
+def _arrival_body_robust(tables: LevelTable, faults,
+                         arrivals: jnp.ndarray, cfg: TeraPoolConfig,
+                         core: str,
+                         widths: tuple | None = None) -> BarrierResult:
+    """(S, K, T) data-dependent grid body under the
+    degradation-tolerant cores; the fixed slot carries the traced
+    :class:`~repro.core.barrier.FaultSpec` shared by every point."""
+    fn = core_fn(core, robust=True)
+    per_trial = jax.vmap(lambda tab, a: fn(a, tab, cfg, widths, faults),
+                         in_axes=(None, 0))                  # over T
+    per_kernel = jax.vmap(per_trial, in_axes=(None, 0))      # over K
+    per_sched = jax.vmap(per_kernel, in_axes=(0, None))      # over S
+    return per_sched(tables, arrivals)
+
+
+@partial(jax.jit, static_argnums=(3, 4, 5), donate_argnums=(2,))
+def _arrival_grid_robust(tables: LevelTable, faults,
+                         arrivals: jnp.ndarray, cfg: TeraPoolConfig,
+                         core: str, widths: tuple | None) -> BarrierResult:
+    """(S, K, T) timeout/quorum arrival grid through one compile."""
+    return _arrival_body_robust(tables, faults, arrivals, cfg, core,
+                                widths)
+
+
 def sweep_arrivals(arrivals: jnp.ndarray,
                    schedules: Sequence[barrier.BarrierSchedule],
                    cfg: TeraPoolConfig = DEFAULT,
@@ -430,7 +516,8 @@ def sweep_arrivals(arrivals: jnp.ndarray,
                    core: str | None = None,
                    trial_chunk: int | None = None,
                    shard: bool = True,
-                   devices=None) -> ArrivalSweepResult:
+                   devices=None,
+                   faults=None) -> ArrivalSweepResult:
     """Sweep a stack of MEASURED arrival matrices across a schedule
     (x optional placement) stack in one compiled call.
 
@@ -443,7 +530,10 @@ def sweep_arrivals(arrivals: jnp.ndarray,
     ...) flows through the same single compiled simulator core, so the
     whole kernel x schedule x placement x trial grid costs one compile
     (trace-count test in tests/test_workload_tuning.py).  ``core`` /
-    ``trial_chunk`` / ``shard`` behave as in :func:`sweep_schedules`.
+    ``trial_chunk`` / ``shard`` / ``faults`` behave as in
+    :func:`sweep_schedules`; fail-stop PEs enter as ``+inf`` arrivals
+    in the stacks themselves (see
+    :func:`repro.core.workloads.apply_faults`).
     """
     arrivals = jnp.asarray(arrivals, jnp.float32)
     if arrivals.ndim == 2:
@@ -464,9 +554,12 @@ def sweep_arrivals(arrivals: jnp.ndarray,
     tables = barrier.stack_tables(schedules, cfg, placements)
     core = barrier_sim.resolve_core(core)
     n_trials = arrivals.shape[1]
-    fixed = jnp.zeros((0,), jnp.float32)   # no delay axis for this body
+    body = "arrival" if faults is None else "arrival_robust"
+    # No delay axis for this body: the fixed slot is a zero-length
+    # placeholder, or the traced FaultSpec on robust grids.
+    fixed = jnp.zeros((0,), jnp.float32) if faults is None else faults
     res = _concat_results([
-        _dispatch_grid("arrival", tables, fixed,
+        _dispatch_grid(body, tables, fixed,
                        jnp.copy(arrivals[:, lo:hi]), cfg, core, shard,
                        devices)
         for lo, hi in _trial_chunks(n_trials, trial_chunk)])

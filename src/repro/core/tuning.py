@@ -212,7 +212,8 @@ def tune_barrier(key, n_pes: int | None = None,
                  placements: Sequence[str] | None = None,
                  core: str | None = None,
                  trial_chunk: int | None = None,
-                 shard: bool = True) -> sweep.SweepResult:
+                 shard: bool = True,
+                 faults=None) -> sweep.SweepResult:
     """Sweep the full mixed-radix design space in ONE compiled call.
 
     Every composition shares the padded level-table shape, so the whole
@@ -228,17 +229,22 @@ def tune_barrier(key, n_pes: int | None = None,
     entry-for-entry), still through the single compiled core.  ``None``
     keeps the placement-free legacy sweep.
 
-    ``core`` / ``trial_chunk`` / ``shard`` pass through to
+    ``core`` / ``trial_chunk`` / ``shard`` / ``faults`` pass through to
     :func:`repro.core.sweep.sweep_schedules`: simulator-core selection,
-    bounded-memory trial chunking (bit-for-bit identical), and
-    schedule-axis device sharding.
+    bounded-memory trial chunking (bit-for-bit identical),
+    schedule-axis device sharding, and the timeout/quorum
+    :class:`~repro.core.barrier.FaultSpec` switching the grid to the
+    degradation-tolerant cores (pair it with the robustness
+    objectives: ``"p99_cycles"``, ``"worst_cycles"``,
+    ``"completion"``).
     """
     if schedules is None:
         schedules = all_schedules(n_pes, cfg, prune=prune)
     scheds, placs = _cross_placements(schedules, placements, cfg)
     return sweep.sweep_schedules(key, scheds, delays, n_trials, cfg,
                                  placements=placs, core=core,
-                                 trial_chunk=trial_chunk, shard=shard)
+                                 trial_chunk=trial_chunk, shard=shard,
+                                 faults=faults)
 
 
 def _cross_placements(schedules: Sequence[BarrierSchedule],
@@ -330,16 +336,32 @@ def best_per_delay(res: sweep.SweepResult) -> List[TunedPoint]:
     return out
 
 
-_OBJECTIVE_GRIDS = ("cycles", "energy")
+_OBJECTIVE_GRIDS = ("cycles", "energy", "p99_cycles", "worst_cycles",
+                    "completion")
 
 
 def _objective_grid(res, objective: str) -> jnp.ndarray:
     """(S, D) selection metric per objective: mean Fig. 4a span
     (``"cycles"``), mean episode energy in pJ (``"energy"``), or their
-    product, the energy-delay product (``"edp"``)."""
+    product, the energy-delay product (``"edp"``).
+
+    The robustness objectives tune the TAIL instead of the mean —
+    ``"p99_cycles"`` (99th-percentile span over trials; the ``"lower"``
+    interpolation keeps it finite whenever <1% of trials hang),
+    ``"worst_cycles"`` (max span over trials), and ``"completion"``
+    (mean abandoned-PE count, minimized — the completion-rate-maximal
+    pick under fault-injected sweeps; identically zero without
+    faults)."""
     sp = jnp.mean(res.span_cycles, axis=-1)
     if objective == "cycles":
         return sp
+    if objective == "p99_cycles":
+        return jnp.percentile(res.span_cycles, 99.0, axis=-1,
+                              method="lower")
+    if objective == "worst_cycles":
+        return jnp.max(res.span_cycles, axis=-1)
+    if objective == "completion":
+        return jnp.mean(res.abandoned_pes.astype(jnp.float32), axis=-1)
     en = jnp.mean(res.energy, axis=-1)
     if objective == "energy":
         return en
@@ -347,7 +369,8 @@ def _objective_grid(res, objective: str) -> jnp.ndarray:
         return sp * en
     raise ValueError(
         f"unknown objective {objective!r}; choose from "
-        f"('cycles', 'energy', 'edp')")
+        f"('cycles', 'energy', 'edp', 'p99_cycles', 'worst_cycles', "
+        f"'completion')")
 
 
 def pareto_schedules(res: sweep.SweepResult,
@@ -541,7 +564,9 @@ def sweep_workloads(key, kernels: Sequence[str] | None = None,
                     placements: Sequence[str] | None = None,
                     core: str | None = None,
                     trial_chunk: int | None = None,
-                    shard: bool = True) -> sweep.ArrivalSweepResult:
+                    shard: bool = True,
+                    faults=None,
+                    fault_model=None) -> sweep.ArrivalSweepResult:
     """Sweep every kernel's MEASURED arrival distribution across the
     schedule (x placement) stack in one compiled call.
 
@@ -553,7 +578,14 @@ def sweep_workloads(key, kernels: Sequence[str] | None = None,
     compiled scanned core via :func:`repro.core.sweep.sweep_arrivals` —
     same one-compile property as the uniform-delay tuner, with
     data-dependent arrivals.
-    """
+
+    ``fault_model`` (a :class:`~repro.core.workloads.PEFaultModel`)
+    degrades every kernel's batch with per-PE straggles / stalls /
+    fail-stops under a key folded off ``key`` — the fault-free draws
+    are IDENTICAL to the no-model call, so robustness deltas isolate
+    the faults.  Pair any nonzero ``p_fail`` with a finite-timeout or
+    sub-1.0-quorum ``faults`` spec (otherwise the plain cores
+    propagate the ``+inf`` arrivals into hung episodes)."""
     n = int(n_pes if n_pes is not None else cfg.n_pes)
     if kernels is None:
         kernels = workloads_mod.FIG6_KERNELS
@@ -564,12 +596,16 @@ def sweep_workloads(key, kernels: Sequence[str] | None = None,
     arrivals = jnp.stack([
         workloads_mod.arrival_batch(k, kernel, (n_trials, n), cfg=cfg)
         for k, kernel in zip(keys, kernels)])
+    if fault_model is not None:
+        arrivals = workloads_mod.apply_faults(
+            jax.random.fold_in(key, 0x0FA17), arrivals, fault_model)
     if schedules is None:
         schedules = all_schedules(n, cfg, prune=prune)
     scheds, placs = _cross_placements(schedules, placements, cfg)
     return sweep.sweep_arrivals(arrivals, scheds, cfg, placements=placs,
                                 kernels=kernels, core=core,
-                                trial_chunk=trial_chunk, shard=shard)
+                                trial_chunk=trial_chunk, shard=shard,
+                                faults=faults)
 
 
 def best_per_kernel(res: sweep.ArrivalSweepResult) -> List[WorkloadPoint]:

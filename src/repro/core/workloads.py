@@ -207,6 +207,118 @@ def fiveg_matmul_arrivals(key: jax.Array, app=None,
 
 
 # ---------------------------------------------------------------------------
+# In-machine PE fault models: heavy-tail stragglers, transient stalls,
+# permanent fail-stop.  A failed PE "arrives" at +inf — the
+# degradation-tolerant simulator cores (timeout/quorum release; see
+# repro.core.barrier_sim) count it abandoned instead of hanging.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PEFaultModel:
+    """Per-epoch PE degradation model, applied on top of any kernel's
+    arrival scatter by :func:`apply_faults`.
+
+    Each PE independently (per epoch) fail-stops with ``p_fail``
+    (arrival -> ``+inf``), transiently stalls with ``p_stall``
+    (arrival += ``stall_cycles``: an IRQ, a DRAM refresh collision, a
+    retried bus transaction), or straggles with ``p_straggler``
+    (arrival += a lognormal heavy tail of median ``straggler_scale``
+    and shape ``straggler_sigma`` — the classic tail-at-scale model).
+    The all-zeros default is a bitwise no-op."""
+
+    p_fail: float = 0.0
+    p_stall: float = 0.0
+    stall_cycles: float = 2000.0
+    p_straggler: float = 0.0
+    straggler_scale: float = 500.0
+    straggler_sigma: float = 1.0
+
+    def __post_init__(self):
+        for name in ("p_fail", "p_stall", "p_straggler"):
+            p = getattr(self, name)
+            if not 0.0 <= float(p) <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+
+
+NO_PE_FAULTS = PEFaultModel()
+
+
+def fault_mask(key: jax.Array, n_pes: int, p_fail: float) -> jnp.ndarray:
+    """(n_pes,) bool fail-stop mask: True = PE never reaches the
+    barrier.  Feed it to ``simulate(..., fault_mask=...)`` (masked
+    arrivals become ``+inf`` there) or to :func:`apply_faults`."""
+    return jax.random.bernoulli(key, p_fail, (n_pes,))
+
+
+def apply_faults(key: jax.Array, arrivals: jnp.ndarray,
+                 model: PEFaultModel = NO_PE_FAULTS) -> jnp.ndarray:
+    """Degrade an arrival vector/batch under ``model``.
+
+    Shape-preserving over any ``(..., n_pes)`` batch; every element
+    draws its own fate (per-PE x per-trial independence).  Ordering is
+    straggle, then stall, then fail-stop — a PE drawn for several
+    fates keeps the worst one (``+inf`` absorbs the additive terms).
+    A model with all probabilities zero returns ``arrivals``
+    unchanged (bitwise; no RNG is consumed)."""
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    if (model.p_fail == 0.0 and model.p_stall == 0.0
+            and model.p_straggler == 0.0):
+        return arrivals
+    k_straggle, k_tail, k_stall, k_fail = jax.random.split(key, 4)
+    shape = arrivals.shape
+    if model.p_straggler > 0.0:
+        tail = model.straggler_scale * jnp.exp(
+            model.straggler_sigma * jax.random.normal(k_tail, shape))
+        straggles = jax.random.bernoulli(k_straggle, model.p_straggler,
+                                         shape)
+        arrivals = arrivals + jnp.where(straggles, tail, 0.0)
+    if model.p_stall > 0.0:
+        stalls = jax.random.bernoulli(k_stall, model.p_stall, shape)
+        arrivals = arrivals + jnp.where(stalls,
+                                        jnp.float32(model.stall_cycles), 0.0)
+    if model.p_fail > 0.0:
+        fails = jax.random.bernoulli(k_fail, model.p_fail, shape)
+        arrivals = jnp.where(fails, jnp.inf, arrivals)
+    return arrivals
+
+
+def straggler_arrivals(key: jax.Array, n_elems: int, *,
+                       tail: str = "lognormal", frac: float = 0.05,
+                       cfg: TeraPoolConfig = DEFAULT,
+                       costs: KernelCosts = COSTS) -> jnp.ndarray:
+    """Heavy-tail straggler epoch: AXPY-like uniform local work where a
+    ``frac`` fraction of PEs draws a heavy-tailed extra delay.
+
+    ``tail="lognormal"`` uses the tail-at-scale lognormal (median =
+    16 x the startup jitter, sigma 1); ``tail="pareto"`` draws from a
+    bounded Pareto (alpha 1.5) spanning [1x, 256x] the base work via
+    the inverse CDF — the power-law tail whose p99 dominates its mean.
+    Both reuse the machine-calibrated :class:`KernelCosts` constants,
+    so the bulk of the CDF matches the fault-free AXPY model."""
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"straggler frac must be in (0, 1], got {frac}")
+    k_base, k_pick, k_tail = jax.random.split(key, 3)
+    n = cfg.n_pes
+    work = (n_elems / n) * costs.axpy_per_elem
+    base = work + _jitter(k_base, n,
+                          costs.startup_jitter + costs.local_frac * work)
+    if tail == "lognormal":
+        extra = (16.0 * costs.startup_jitter
+                 * jnp.exp(jax.random.normal(k_tail, (n,))))
+    elif tail == "pareto":
+        alpha, lo, hi = 1.5, work, 256.0 * work
+        u = jax.random.uniform(k_tail, (n,))
+        extra = (lo ** -alpha
+                 - u * (lo ** -alpha - hi ** -alpha)) ** (-1.0 / alpha)
+    else:
+        raise ValueError(
+            f"unknown straggler tail {tail!r}; choose from "
+            f"('lognormal', 'pareto')")
+    straggles = jax.random.bernoulli(k_pick, frac, (n,))
+    return base + jnp.where(straggles, extra, 0.0)
+
+
+# ---------------------------------------------------------------------------
 # Uniform batched sampler API: kernel name -> stacked arrival matrices.
 # ---------------------------------------------------------------------------
 
@@ -215,9 +327,11 @@ FIG6_KERNELS: Tuple[str, ...] = tuple(
     f"{kernel}_{label}" for kernel, dims in benchmark_suite().items()
     for label in dims)
 
-#: Every named arrival model: the Fig. 5/6 suite plus the 5G epochs.
-ARRIVAL_KERNELS: Tuple[str, ...] = FIG6_KERNELS + ("fiveg_fft_stage",
-                                                   "fiveg_matmul_row")
+#: Every named arrival model: the Fig. 5/6 suite, the 5G epochs, and
+#: the heavy-tail straggler epochs of the PE fault models.
+ARRIVAL_KERNELS: Tuple[str, ...] = FIG6_KERNELS + (
+    "fiveg_fft_stage", "fiveg_matmul_row",
+    "straggler_lognormal", "straggler_pareto")
 
 
 def arrival_fns(cfg: TeraPoolConfig = DEFAULT, costs: KernelCosts = COSTS,
@@ -235,6 +349,12 @@ def arrival_fns(cfg: TeraPoolConfig = DEFAULT, costs: KernelCosts = COSTS,
         lambda key: fiveg_stage_arrivals(key, app, cfg)
     flat["fiveg_matmul_row"] = \
         lambda key: fiveg_matmul_arrivals(key, app, cfg)
+    flat["straggler_lognormal"] = \
+        lambda key: straggler_arrivals(key, 1 << 18, tail="lognormal",
+                                       cfg=cfg, costs=costs)
+    flat["straggler_pareto"] = \
+        lambda key: straggler_arrivals(key, 1 << 18, tail="pareto",
+                                       cfg=cfg, costs=costs)
     return flat
 
 

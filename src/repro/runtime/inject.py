@@ -94,6 +94,45 @@ class FaultPlan:
     fired: List[str] = dataclasses.field(default_factory=list)
     _done: set = dataclasses.field(default_factory=set, repr=False)
 
+    def __post_init__(self):
+        """Reject malformed plans at construction, not mid-sweep: a
+        typo'd plan that silently never fires (or fires something that
+        isn't a fault) invalidates whatever resilience property the
+        test thought it proved."""
+        seen: Dict[int, SimulatedFault] = {}
+        for idx, fault in self.faults.items():
+            self._check_index(idx, "faults")
+            if not isinstance(fault, SimulatedFault):
+                raise ValueError(
+                    f"unknown fault kind at chunk {idx}: expected a "
+                    f"SimulatedFault (DeviceLoss / SimulatedOOM / "
+                    f"Preemption), got {type(fault).__name__}: {fault!r}")
+            dup = next((j for j, f in seen.items() if f is fault), None)
+            if dup is not None:
+                raise ValueError(
+                    f"duplicate fire point: the same {type(fault).__name__} "
+                    f"instance is planned at chunks {dup} and {idx}; "
+                    f"each boundary needs its own fault instance "
+                    f"(faults fire once and carry per-firing state)")
+            seen[idx] = fault
+        for idx, secs in self.straggle.items():
+            self._check_index(idx, "straggle")
+            s = float(secs)
+            if not s >= 0.0 or s != s or s == float("inf"):
+                raise ValueError(
+                    f"straggle seconds at chunk {idx} must be finite "
+                    f"and >= 0, got {secs!r}")
+
+    @staticmethod
+    def _check_index(idx, where: str) -> None:
+        if isinstance(idx, bool) or not isinstance(idx, int):
+            raise ValueError(
+                f"{where} keys must be chunk indices (int), got "
+                f"{idx!r} ({type(idx).__name__})")
+        if idx < 0:
+            raise ValueError(
+                f"{where} keys must be >= 0 (chunk indices), got {idx}")
+
     def at_chunk(self, idx: int) -> None:
         """Raise the planned fault for boundary ``idx`` (once)."""
         fault = self.faults.get(idx)

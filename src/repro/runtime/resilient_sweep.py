@@ -208,7 +208,9 @@ class _ChunkedGrid:
 
     def _template(self, lo: int, hi: int) -> dict:
         shape = self.chunk_shape(lo, hi)
-        return {f: np.zeros(shape, np.float32)
+        dtypes = {"completed": np.bool_, "abandoned_pes": np.int32,
+                  "timed_out_levels": np.int32}
+        return {f: np.zeros(shape, dtypes.get(f, np.float32))
                 for f in BarrierResult._fields}
 
     def _restore_chunk(self, idx: int, lo: int, hi: int

@@ -1,0 +1,363 @@
+"""Degradation-tolerant barriers: timeout/quorum release semantics.
+
+Acceptance bars of the robustness PR:
+
+* ZERO-FAULT DEGENERATION — with no fault mask, infinite timeouts and
+  quorum 1.0, both robust cores return bit-for-bit the plain cores'
+  results (every field) across compositions x placements.
+* ORACLE EQUALITY — under fault masks, finite timeouts, per-level
+  timeout rows and sub-1.0 quorums, both robust cores match the
+  independent numpy walk (``simulate_robust_reference``) bit-for-bit
+  at N in {64, 256, 1024}.
+* ONE-COMPILE — fault masks, timeout rows and quorum fractions are
+  traced data: sweeping them (directly or through the sweep/tuning
+  grids) never retraces a core.
+* SEMANTICS — watchdogs bound the release time of straggler-held
+  levels, quorums release at ceil(q*g)-of-g, abandoned PEs are
+  reported, and the energy column prices timeout polling and
+  abandonment on top of the plain episode energy.
+* ROBUST TUNING — the tail objectives (p99/worst/completion) select
+  schedules, and under injected PE faults the p99-tuned winner is at
+  least as good on p99 as the latency-tuned winner evaluated on the
+  same faulted arrivals.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (barrier, barrier_sim, fiveg, placement, sweep,
+                        tuning, workloads)
+from repro.core.barrier import NO_FAULTS, fault_spec
+from repro.core.barrier_sim import BarrierResult
+from repro.core.energy import DEFAULT_ENERGY
+from repro.core.topology import TeraPoolConfig
+
+KEY = jax.random.PRNGKey(11)
+CFG = TeraPoolConfig(n_pes=64)
+
+COMPS = [(8, 8), (4, 4, 4), (2, 8, 4), (64,), (2, 2, 2, 2, 2, 2)]
+
+SPECS = [
+    fault_spec(),                                        # degenerate
+    fault_spec(timeout_cycles=250.0),
+    fault_spec(quorum_frac=0.75),
+    fault_spec(timeout_cycles=300.0, quorum_frac=0.9),
+    fault_spec(timeout_cycles=[200.0, 400.0, 800.0]),    # per-level row
+]
+
+
+def _arr(key, batch, n, scale=400.0):
+    return jax.random.uniform(key, (batch, n), jnp.float32, 0.0, scale)
+
+
+def _mask(key, batch, n, p=0.1):
+    return jax.random.bernoulli(key, p, (batch, n))
+
+
+def _assert_bitwise(got, want, ctx):
+    for name, a, b in zip(BarrierResult._fields, got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{ctx}: {name}")
+
+
+# ---------------------------------------------------------------------------
+# Zero-fault degeneration: robust cores ARE the plain cores bit-for-bit.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("core", ["scan", "telescope"])
+def test_zero_faults_degenerate_bitforbit(core):
+    arr = _arr(KEY, 5, 64)
+    for comp in COMPS:
+        sched = barrier.mixed_radix_tree(comp, n_pes=64, cfg=CFG)
+        placs = [None] + [placement.place_counters(sched, s, CFG)
+                          for s in placement.STRATEGIES]
+        for plc in placs:
+            plain = barrier_sim.simulate(arr, sched, CFG, placement=plc,
+                                         core=core)
+            rob = barrier_sim.simulate(arr, sched, CFG, placement=plc,
+                                       core=core, faults=NO_FAULTS)
+            ctx = f"{comp}@{plc.strategy if plc else None}/{core}"
+            for f in ("exit_time", "last_arrival", "span_cycles",
+                      "mean_residency", "energy"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(plain, f)),
+                    np.asarray(getattr(rob, f)), err_msg=f"{ctx}: {f}")
+            assert bool(rob.completed.all()), ctx
+            assert int(rob.abandoned_pes.sum()) == 0, ctx
+            assert int(rob.timed_out_levels.sum()) == 0, ctx
+
+
+def test_hw_event_unit_degenerates_too():
+    sched = barrier.hw_event_unit(64, cfg=CFG)
+    arr = _arr(KEY, 3, 64)
+    for core in ("scan", "telescope"):
+        plain = barrier_sim.simulate(arr, sched, CFG, core=core)
+        rob = barrier_sim.simulate(arr, sched, CFG, core=core,
+                                   faults=NO_FAULTS)
+        np.testing.assert_array_equal(np.asarray(plain.exit_time),
+                                      np.asarray(rob.exit_time))
+        np.testing.assert_array_equal(np.asarray(plain.energy),
+                                      np.asarray(rob.energy))
+
+
+# ---------------------------------------------------------------------------
+# Oracle equality: both robust cores == the independent numpy fault walk.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("core", ["scan", "telescope"])
+def test_oracle_bitforbit_n64_compositions_placements(core):
+    arr = _arr(KEY, 4, 64)
+    mask = _mask(jax.random.fold_in(KEY, 1), 4, 64)
+    for comp in [(8, 8), (4, 4, 4), (2, 8, 4)]:
+        sched = barrier.mixed_radix_tree(comp, n_pes=64, cfg=CFG)
+        for plc in [None,
+                    placement.place_counters(sched, "central", CFG),
+                    placement.place_counters(sched, "tile_interleaved",
+                                             CFG)]:
+            for si, spec in enumerate(SPECS):
+                ref = barrier_sim.simulate_robust_reference(
+                    arr, sched, CFG, placement=plc, faults=spec,
+                    fault_mask=mask)
+                got = barrier_sim.simulate(arr, sched, CFG, placement=plc,
+                                           core=core, faults=spec,
+                                           fault_mask=mask)
+                _assert_bitwise(
+                    got, ref,
+                    f"{comp}@{plc.strategy if plc else None}/spec{si}")
+
+
+@pytest.mark.parametrize("n,comp", [(256, (4, 8, 8)), (1024, (8, 8, 16))])
+def test_oracle_bitforbit_large_n(n, comp):
+    cfg = TeraPoolConfig(n_pes=n)
+    arr = _arr(jax.random.fold_in(KEY, n), 2, n, scale=600.0)
+    mask = _mask(jax.random.fold_in(KEY, n + 1), 2, n, p=0.02)
+    sched = barrier.mixed_radix_tree(comp, n_pes=n, cfg=cfg)
+    for spec in [fault_spec(timeout_cycles=500.0, quorum_frac=0.95),
+                 fault_spec(quorum_frac=0.5)]:
+        ref = barrier_sim.simulate_robust_reference(
+            arr, sched, cfg, faults=spec, fault_mask=mask)
+        for core in ("scan", "telescope"):
+            got = barrier_sim.simulate(arr, sched, cfg, core=core,
+                                       faults=spec, fault_mask=mask)
+            _assert_bitwise(got, ref, f"N={n}/{core}")
+
+
+def test_oracle_bitforbit_central_and_hw():
+    """Single-level central counter and the hw event unit walk through
+    the same oracle under faults."""
+    arr = _arr(KEY, 3, 64)
+    mask = _mask(jax.random.fold_in(KEY, 2), 3, 64)
+    spec = fault_spec(timeout_cycles=400.0, quorum_frac=0.9)
+    for sched in (barrier.central_counter(64, cfg=CFG),
+                  barrier.hw_event_unit(64, cfg=CFG)):
+        ref = barrier_sim.simulate_robust_reference(
+            arr, sched, CFG, faults=spec, fault_mask=mask)
+        for core in ("scan", "telescope"):
+            got = barrier_sim.simulate(arr, sched, CFG, core=core,
+                                       faults=spec, fault_mask=mask)
+            _assert_bitwise(got, ref, f"{sched.radix}/{core}")
+
+
+# ---------------------------------------------------------------------------
+# One-compile: masks, timeouts and quorums are traced data.
+# ---------------------------------------------------------------------------
+
+def test_one_compile_across_masks_and_specs():
+    sched = barrier.mixed_radix_tree((4, 4, 4), n_pes=64, cfg=CFG)
+    arr = _arr(KEY, 2, 64)
+    # warm both robust cores
+    for core in ("scan", "telescope"):
+        barrier_sim.simulate(arr, sched, CFG, core=core, faults=NO_FAULTS)
+    t0 = barrier_sim.core_traces()
+    for i, spec in enumerate(SPECS[:4]):
+        mask = _mask(jax.random.fold_in(KEY, 10 + i), 2, 64, p=0.05 * i)
+        for core in ("scan", "telescope"):
+            barrier_sim.simulate(arr, sched, CFG, core=core, faults=spec,
+                                 fault_mask=mask)
+    assert barrier_sim.core_traces() == t0, \
+        "fault mask / timeout / quorum sweep retraced a core"
+
+
+def test_one_compile_robust_sweep_grids():
+    scheds = [barrier.mixed_radix_tree(c, n_pes=64, cfg=CFG)
+              for c in [(8, 8), (4, 4, 4)]]
+    sweep.sweep_schedules(KEY, scheds, (0.0, 128.0), n_trials=4, cfg=CFG,
+                          faults=fault_spec(timeout_cycles=200.0))
+    arrs = _arr(jax.random.fold_in(KEY, 3), 4, 64)[None]
+    sweep.sweep_arrivals(arrs, scheds, CFG,
+                         faults=fault_spec(quorum_frac=0.8))
+    t0 = barrier_sim.core_traces()
+    sweep.sweep_schedules(KEY, scheds, (64.0, 512.0), n_trials=4, cfg=CFG,
+                          faults=fault_spec(timeout_cycles=900.0,
+                                            quorum_frac=0.6))
+    sweep.sweep_arrivals(arrs * 0.5, scheds, CFG,
+                         faults=fault_spec(quorum_frac=0.95))
+    assert barrier_sim.core_traces() == t0
+
+
+# ---------------------------------------------------------------------------
+# Semantics: watchdog bounds, quorum counts, abandonment, energy prices.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("core", ["scan", "telescope"])
+def test_timeout_bounds_straggler_hold(core):
+    """One PE arrives 1e6 cycles late.  Without a watchdog the barrier
+    waits for it; with one, the release is bounded near the deadline
+    and exactly one PE is abandoned."""
+    sched = barrier.mixed_radix_tree((8, 8), n_pes=64, cfg=CFG)
+    arr = jnp.zeros((64,), jnp.float32).at[17].set(1e6)
+    slow = barrier_sim.simulate(arr, sched, CFG, core=core,
+                                faults=NO_FAULTS)
+    fast = barrier_sim.simulate(arr, sched, CFG, core=core,
+                                faults=fault_spec(timeout_cycles=100.0))
+    assert float(slow.exit_time) > 1e6
+    assert float(fast.exit_time) < 1000.0
+    assert int(fast.abandoned_pes) == 1
+    assert int(fast.timed_out_levels) >= 1
+    assert bool(fast.completed)
+
+
+@pytest.mark.parametrize("core", ["scan", "telescope"])
+def test_quorum_releases_k_of_n(core):
+    """With quorum 0.5 on a single 64-wide level, the release tracks
+    the 32nd arrival, not the last: stragglers beyond the quorum are
+    abandoned without any watchdog."""
+    sched = barrier.central_counter(64, cfg=CFG)
+    arr = jnp.concatenate([jnp.zeros(32), jnp.full((32,), 1e5)]
+                          ).astype(jnp.float32)
+    res = barrier_sim.simulate(arr, sched, CFG, core=core,
+                               faults=fault_spec(quorum_frac=0.5))
+    assert float(res.exit_time) < 1e4
+    assert int(res.abandoned_pes) == 32
+    assert int(res.timed_out_levels) == 0     # quorum, not watchdog
+    full = barrier_sim.simulate(arr, sched, CFG, core=core,
+                                faults=NO_FAULTS)
+    assert float(full.exit_time) > 1e5
+
+
+@pytest.mark.parametrize("core", ["scan", "telescope"])
+def test_fail_stop_mask_abandons_and_releases(core):
+    """Fail-stop PEs (+inf arrivals) are abandoned at entry; the
+    survivors release at the watchdog deadline and the episode still
+    completes with a finite exit."""
+    sched = barrier.mixed_radix_tree((8, 8), n_pes=64, cfg=CFG)
+    arr = jnp.zeros((64,), jnp.float32)
+    mask = jnp.zeros((64,), bool).at[jnp.asarray([3, 40, 41])].set(True)
+    res = barrier_sim.simulate(arr, sched, CFG, core=core,
+                               faults=fault_spec(timeout_cycles=50.0),
+                               fault_mask=mask)
+    assert bool(res.completed)
+    assert np.isfinite(float(res.exit_time))
+    assert int(res.abandoned_pes) == 3
+    # without a release policy the same mask hangs the barrier
+    hung = barrier_sim.simulate(arr, sched, CFG, core=core,
+                                fault_mask=mask)
+    assert not np.isfinite(float(hung.exit_time))
+    assert not bool(hung.completed)
+
+
+def test_robust_energy_prices_timeouts_and_abandonment():
+    """energy == plain episode energy + e_timeout_poll * timed levels
+    + e_abandon * abandoned PEs, on the shared accounting helper."""
+    sched = barrier.mixed_radix_tree((8, 8), n_pes=64, cfg=CFG)
+    arr = jnp.zeros((64,), jnp.float32).at[17].set(1e6)
+    res = barrier_sim.simulate(arr, sched, CFG, core="scan",
+                               faults=fault_spec(timeout_cycles=100.0))
+    consts = barrier_sim.schedule_energy_constants(sched, None, CFG,
+                                                   DEFAULT_ENERGY)
+    from repro.core.energy import episode_energy
+    base = episode_energy(consts[0], consts[1], consts[2], 64,
+                          res.mean_residency)
+    want = (float(base)
+            + DEFAULT_ENERGY.e_timeout_poll * float(res.timed_out_levels)
+            + DEFAULT_ENERGY.e_abandon * float(res.abandoned_pes))
+    assert float(res.energy) == pytest.approx(want, rel=1e-6)
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="timeout_cycles"):
+        fault_spec(timeout_cycles=-1.0)
+    with pytest.raises(ValueError, match="quorum_frac"):
+        fault_spec(quorum_frac=0.0)
+    with pytest.raises(ValueError, match="quorum_frac"):
+        fault_spec(quorum_frac=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Robust tuning: tail objectives + completion under injected faults.
+# ---------------------------------------------------------------------------
+
+def test_tail_objectives_select_and_order():
+    res = tuning.tune_barrier(KEY, 64, delays=(256.0,), n_trials=16,
+                              cfg=CFG, prune="hierarchy")
+    mean = jnp.mean(res.span_cycles, axis=-1)
+    for obj in ("p99_cycles", "worst_cycles", "completion"):
+        grid = tuning._objective_grid(res, obj)
+        assert grid.shape == mean.shape
+    # fault-free sweeps: nothing abandoned, mean <= p99 <= worst
+    assert float(jnp.max(tuning._objective_grid(res, "completion"))) == 0.0
+    p99 = tuning._objective_grid(res, "p99_cycles")
+    worst = tuning._objective_grid(res, "worst_cycles")
+    assert bool(jnp.all(mean <= p99 + 1e-3))
+    assert bool(jnp.all(p99 <= worst + 1e-3))
+    with pytest.raises(ValueError, match="unknown objective"):
+        tuning._objective_grid(res, "p50")
+
+
+def test_robust_tuning_beats_latency_winner_on_p99_under_faults():
+    """The acceptance bar in miniature: inject fail-stop faults +
+    straggler tails into a workload sweep; the p99-tuned schedule must
+    be at least as good on p99 as the fault-free latency winner,
+    evaluated on the SAME faulted arrivals."""
+    model = workloads.PEFaultModel(p_fail=0.02, p_straggler=0.1,
+                                   straggler_scale=2000.0)
+    spec = fault_spec(timeout_cycles=1500.0, quorum_frac=0.95)
+    clean = tuning.sweep_workloads(KEY, ("dotp_1Mi",), 64, n_trials=16,
+                                   cfg=CFG, prune="hierarchy")
+    faulted = tuning.sweep_workloads(KEY, ("dotp_1Mi",), 64, n_trials=16,
+                                     cfg=CFG, prune="hierarchy",
+                                     faults=spec, fault_model=model)
+    assert clean.schedules == faulted.schedules
+    lat_i = int(jnp.argmin(tuning._objective_grid(clean, "cycles")[:, 0]))
+    p99_grid = tuning._objective_grid(faulted, "p99_cycles")[:, 0]
+    rob_i = int(jnp.argmin(p99_grid))
+    assert float(p99_grid[rob_i]) <= float(p99_grid[lat_i])
+    # faults actually bit: some episodes abandoned PEs
+    assert float(jnp.max(faulted.abandoned_pes)) > 0
+    assert float(jnp.min(faulted.completion_rate)) < 1.0
+    # fault-free draws are identical with and without the model hook
+    same = tuning.sweep_workloads(KEY, ("dotp_1Mi",), 64, n_trials=16,
+                                  cfg=CFG, prune="hierarchy",
+                                  fault_model=workloads.NO_PE_FAULTS)
+    np.testing.assert_array_equal(np.asarray(same.span_cycles),
+                                  np.asarray(clean.span_cycles))
+
+
+# ---------------------------------------------------------------------------
+# 5G under PE failures: finite, degrading, one compile across rates.
+# ---------------------------------------------------------------------------
+
+def test_fiveg_faults_mode_smoke():
+    app = fiveg.FiveGConfig(n_rx=16, ffts_per_round=1)
+    key = jax.random.PRNGKey(5)
+    plain = fiveg.simulate_app(key, app, sync="tree", radix=32,
+                               core="scan")
+    rob0 = fiveg.simulate_app(
+        key, app, sync="tree", radix=32, core="scan",
+        faults=fiveg.FiveGFaults(fail_rate=0.0,
+                                 timeout_cycles=float("inf")))
+    assert float(plain.total_cycles) == float(rob0.total_cycles)
+    assert float(rob0.completion_rate) == 1.0
+
+    t0 = barrier_sim.core_traces()
+    res = fiveg.simulate_app(
+        key, app, sync="tree", radix=32, core="scan",
+        faults=fiveg.FiveGFaults(fail_rate=0.02, timeout_cycles=2000.0,
+                                 seed=3))
+    assert barrier_sim.core_traces() == t0    # mask/spec are traced data
+    assert np.isfinite(float(res.total_cycles))
+    assert float(res.completion_rate) < 1.0
+    assert float(res.total_cycles) >= float(plain.total_cycles)
+    with pytest.raises(ValueError, match="fail_rate"):
+        fiveg.FiveGFaults(fail_rate=1.5)

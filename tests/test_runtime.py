@@ -225,3 +225,62 @@ def test_prune_keeps_newest_complete(tmp_path):
     checkpoint.prune(tmp_path, keep=2)
     left = sorted(d.name for d in tmp_path.iterdir())
     assert left == ["step_00000003", "step_00000004"]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan construction-time validation: malformed plans fail fast with
+# actionable errors instead of silently never firing mid-sweep.
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_valid_plans_construct():
+    from repro.runtime.inject import (DeviceLoss, FaultPlan, Preemption,
+                                      SimulatedOOM)
+    plan = FaultPlan(faults={0: SimulatedOOM(), 3: DeviceLoss(2),
+                             7: Preemption()},
+                     straggle={1: 0.25, 2: 0.0})
+    assert not plan.exhausted
+    with pytest.raises(SimulatedOOM):
+        plan.at_chunk(0)
+    plan.at_chunk(0)                      # fires exactly once
+    assert plan.straggle_seconds(1) == 0.25
+    assert plan.straggle_seconds(1) == 0.0
+
+
+def test_fault_plan_rejects_bad_chunk_indices():
+    from repro.runtime.inject import FaultPlan, SimulatedOOM
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultPlan(faults={-1: SimulatedOOM()})
+    with pytest.raises(ValueError, match="int"):
+        FaultPlan(faults={"2": SimulatedOOM()})
+    with pytest.raises(ValueError, match="int"):
+        FaultPlan(faults={True: SimulatedOOM()})
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultPlan(straggle={-3: 1.0})
+
+
+def test_fault_plan_rejects_unknown_fault_kinds():
+    from repro.runtime.inject import FaultPlan
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(faults={0: RuntimeError("not a simulated fault")})
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(faults={0: "oom"})
+
+
+def test_fault_plan_rejects_duplicate_fire_points():
+    from repro.runtime.inject import DeviceLoss, FaultPlan, SimulatedOOM
+    shared = SimulatedOOM()
+    with pytest.raises(ValueError, match="duplicate fire point"):
+        FaultPlan(faults={0: shared, 2: shared})
+    # distinct instances of the same kind are fine
+    FaultPlan(faults={0: SimulatedOOM(), 2: SimulatedOOM()})
+    FaultPlan(faults={0: DeviceLoss(1), 1: DeviceLoss(1)})
+
+
+def test_fault_plan_rejects_bad_straggle_seconds():
+    from repro.runtime.inject import FaultPlan
+    with pytest.raises(ValueError, match="finite"):
+        FaultPlan(straggle={0: float("inf")})
+    with pytest.raises(ValueError, match="finite"):
+        FaultPlan(straggle={0: float("nan")})
+    with pytest.raises(ValueError, match="finite"):
+        FaultPlan(straggle={0: -0.5})

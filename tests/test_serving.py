@@ -401,3 +401,47 @@ def test_sync_pareto_picks_the_knee():
     # the knee is never more energy-hungry than the best-by-cycles end
     front = tuning.pareto_front(grid)
     assert knee.mean_energy <= front[0].mean_energy
+
+
+def test_circuit_breaker_half_open_probe_under_concurrent_submits():
+    """The half-open race: while the breaker is probe-ready, several
+    clients submit CONCURRENTLY.  max_batch=1 serializes them through
+    the single worker, so exactly ONE request becomes the (failing)
+    probe batch and is degraded; the probe's failure re-opens then
+    re-probes, the next becomes the successful probe, and every later
+    request is served exactly.  No double-trip (failures never exceed
+    the threshold bookkeeping), no wedged thread (every ticket
+    resolves), breaker closed at the end."""
+    import threading
+    plan = FaultPlan(faults={0: SimulatedOOM(), 1: SimulatedOOM()})
+    cfg = _cfg(max_batch_retries=0, breaker_threshold=1,
+               breaker_probe_after=0.0, backoff_base=0.0,
+               backoff_cap=0.0, max_batch=1)
+    with TuningServer(cfg, fault_plan=plan, sleep=_nosleep) as srv:
+        # Trip the breaker (fault 0), leaving it probe-ready
+        # (probe_after=0.0 -> immediately half-open).
+        r0 = srv.tune(TuneRequest(arrivals=_trace(20)), timeout=300)
+        assert r0.provenance == DEGRADED and r0.tier == TIER_FALLBACK
+        assert srv.breaker_state != "closed"
+
+        # 4 concurrent submits race into the half-open breaker.
+        resps = [None] * 4
+        def client(j):
+            resps[j] = srv.tune(TuneRequest(arrivals=_trace(21 + j)),
+                                timeout=300)
+        threads = [threading.Thread(target=client, args=(j,))
+                   for j in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+            assert not t.is_alive(), "wedged client thread"
+
+        # Exactly one of the racers was the failing probe (fault 1);
+        # the rest were served exactly once the breaker closed.
+        provs = sorted(r.provenance for r in resps)
+        assert provs == [BATCHED, BATCHED, BATCHED, DEGRADED], provs
+        assert all(r.ok for r in resps if r.provenance == BATCHED)
+        assert srv.breaker_state == "closed"
+        assert srv._breaker_failures == 0
+    assert srv.stats.faults.get("SimulatedOOM") == 2

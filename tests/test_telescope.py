@@ -206,9 +206,12 @@ def test_trial_chunking_bitforbit_sweep(trial_chunk):
     _assert_bitwise(
         sweep.BarrierResult(full.exit_time, full.last_arrival,
                             full.span_cycles, full.mean_residency,
-                            full.energy),
+                            full.energy, full.completed,
+                            full.abandoned_pes, full.timed_out_levels),
         (part.exit_time, part.last_arrival, part.span_cycles,
-         part.mean_residency, part.energy), f"chunk={trial_chunk}")
+         part.mean_residency, part.energy, part.completed,
+         part.abandoned_pes, part.timed_out_levels),
+        f"chunk={trial_chunk}")
 
 
 def test_trial_chunking_bitforbit_arrivals():

@@ -21,7 +21,8 @@ def test_registry_covers_suite_and_5g_epochs():
         for label in dims:
             assert f"{kernel}_{label}" in workloads.FIG6_KERNELS
     assert workloads.ARRIVAL_KERNELS == workloads.FIG6_KERNELS + (
-        "fiveg_fft_stage", "fiveg_matmul_row")
+        "fiveg_fft_stage", "fiveg_matmul_row",
+        "straggler_lognormal", "straggler_pareto")
     assert set(workloads.arrival_fns()) == set(workloads.ARRIVAL_KERNELS)
 
 
@@ -60,6 +61,52 @@ def test_arrival_batch_validation():
         workloads.arrival_batch(KEY, "not_a_kernel", (2, 64))
     with pytest.raises(ValueError):
         workloads.arrival_batch(KEY, "dotp_1Mi", (0, 64))
+
+
+def test_straggler_samplers_heavy_tail():
+    """The straggler epochs keep the AXPY-like bulk but grow a heavy
+    right tail: max/median far beyond the fault-free scatter, Pareto
+    bounded at 256x the base work."""
+    n = 256
+    work = (1 << 18) / n * workloads.COSTS.axpy_per_elem
+    for kernel in ("straggler_lognormal", "straggler_pareto"):
+        a = np.asarray(workloads.arrival_batch(KEY, kernel, (8, n)))
+        med = np.median(a)
+        assert abs(med - work) < 0.2 * work, kernel   # bulk ~ base work
+        assert a.max() > 1.1 * med, kernel            # heavy tail
+    p = np.asarray(workloads.arrival_batch(KEY, "straggler_pareto", (8, n)))
+    assert p.max() <= 258.0 * work                    # bounded Pareto
+    with pytest.raises(ValueError, match="unknown straggler tail"):
+        workloads.straggler_arrivals(KEY, 1 << 18, tail="cauchy")
+    with pytest.raises(ValueError, match="frac"):
+        workloads.straggler_arrivals(KEY, 1 << 18, frac=0.0)
+
+
+def test_pe_fault_model_apply():
+    """apply_faults: zero model is a bitwise no-op; fail-stop masks to
+    +inf at ~p_fail; stalls/straggles only ever delay arrivals."""
+    arr = workloads.arrival_batch(KEY, "axpy_256Ki", (16, 256))
+    same = workloads.apply_faults(KEY, arr)
+    np.testing.assert_array_equal(np.asarray(arr), np.asarray(same))
+
+    model = workloads.PEFaultModel(p_fail=0.1)
+    failed = np.asarray(workloads.apply_faults(KEY, arr, model))
+    rate = np.mean(~np.isfinite(failed))
+    assert 0.05 < rate < 0.2
+    np.testing.assert_array_equal(failed[np.isfinite(failed)],
+                                  np.asarray(arr)[np.isfinite(failed)])
+
+    slow = workloads.PEFaultModel(p_stall=0.3, stall_cycles=123.0,
+                                  p_straggler=0.2)
+    delayed = np.asarray(workloads.apply_faults(KEY, arr, slow))
+    assert np.isfinite(delayed).all()
+    assert (delayed >= np.asarray(arr)).all()
+    assert (delayed > np.asarray(arr)).any()
+
+    mask = np.asarray(workloads.fault_mask(KEY, 4096, 0.25))
+    assert mask.dtype == bool and 0.15 < mask.mean() < 0.35
+    with pytest.raises(ValueError, match="p_fail"):
+        workloads.PEFaultModel(p_fail=1.5)
 
 
 def test_fiveg_epoch_models_match_config():
